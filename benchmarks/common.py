@@ -1,0 +1,91 @@
+"""Shared benchmark plumbing: paper-model calibration + experiment setup."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.calibration import (
+    make_edge_cloud_pair,
+    measure_seq2seq,
+    measure_seq2seq_grid,
+)
+from repro.data.synthetic import LANGUAGE_PAIRS
+from repro.core.length_regressor import LinearN2M, prefilter_pairs
+from repro.core.profiles import make_profile
+from repro.core.scheduler import CNMTScheduler, NaiveScheduler
+from repro.core.simulator import make_stream, table1_row
+from repro.data.synthetic import make_corpus
+from repro.nmt.registry import make_paper_model
+
+# Jetson-TX2-vs-Titan-XP-like speed gap (paper Fig. 2a slopes)
+CLOUD_SPEEDUP = 5.0
+CAL_LENGTHS = (4, 8, 16, 32, 64, 96)
+MODEL_SCALE = 0.25        # CPU-budget scale; latency LINEARITY is scale-free
+# The paper's edge device is a Jetson TX2 running the FULL-size models;
+# our measurements are quarter-scale models on a fast CPU core.  EDGE_SCALE
+# rescales the measured plane to Jetson-class absolute latency (~8x) so the
+# edge/cloud/RTT crossover sits inside the corpus length distribution, as
+# in the paper.  Slopes/structure stay measured, only the unit changes.
+EDGE_SCALE = 8.0
+
+
+def calibrate_dataset(dataset: str, *, scale: float = MODEL_SCALE,
+                      reps: int = 2, seed: int = 0):
+    """Measure the real JAX model on this CPU and fit the T_exe planes.
+
+    The (N, M) grid is controlled (forced decode length) so the plane fit
+    has coverage; M values per N bracket the language pair's gamma*N+delta
+    line.  Returns (edge, cloud, n, m, t).
+    """
+    model, pair = make_paper_model(dataset, scale=scale, vocab=2000,
+                                   max_decode_len=160)
+    import jax
+    params = model.init(jax.random.PRNGKey(seed))
+    translate = model.make_translate(params)
+
+    lp = LANGUAGE_PAIRS[dataset]
+
+    def m_grid(n: int):
+        center = lp.gamma * n + lp.delta
+        return sorted({max(2, int(round(center * f))) for f in (0.5, 1.0, 1.6)})
+
+    n, m, t = measure_seq2seq_grid(
+        lambda toks, fl: translate(toks, forced_len=fl),
+        CAL_LENGTHS, m_grid, reps=reps, warmup=1, seed=seed, vocab=2000)
+    edge, cloud = make_edge_cloud_pair(n, m, t, speedup=CLOUD_SPEEDUP,
+                                       edge_scale=EDGE_SCALE)
+    return edge, cloud, n, m, t
+
+
+def build_experiment(dataset: str, *, n_requests: int = 100_000,
+                     n_fit: int = 10_000, seed: int = 0,
+                     edge=None, cloud=None):
+    """Everything table1 needs for one dataset row."""
+    corpus = make_corpus(dataset, n_fit + n_requests, seed=seed)
+    fit, eval_ = corpus.split(n_fit)
+    nf, mf = prefilter_pairs(fit.n, fit.m_real)
+    n2m = LinearN2M().fit(nf, mf)
+    cnmt = CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m)
+    naive = NaiveScheduler(edge, cloud, nf, mf)
+    return {"fit": fit, "eval": eval_, "n2m": n2m, "cnmt": cnmt,
+            "naive": naive}
+
+
+def run_table1_cell(dataset: str, profile_name: str, *, edge, cloud,
+                    exp, seed: int = 0, probe_interval_s=60.0):
+    """One Table-I cell.  ``probe_interval_s``: the gateway refreshes its
+    RTT estimate at least this often (paper §II-C assumes near-continuous
+    samples; without it a constant-M̂ policy can lock local forever after
+    one spike — see tests/test_simulator.py for the paper-faithful mode).
+    """
+    profile = make_profile(profile_name, seed=seed)
+    stream = make_stream(exp["eval"].n, exp["eval"].m_out,
+                         exp["eval"].m_real,
+                         duration_s=profile.times_s[-1], seed=seed)
+    return table1_row(dataset=dataset, stream=stream, profile=profile,
+                      edge=edge, cloud=cloud, cnmt=exp["cnmt"],
+                      naive=exp["naive"], seed=seed,
+                      probe_interval_s=probe_interval_s)

@@ -1,0 +1,47 @@
+"""Paper Fig. 2a: total translation time is LINEAR in the output length M.
+
+Measures the real Marian-style transformer (JAX, this CPU) across input
+lengths, groups wall-clock by produced M, fits T = a*M + b and reports
+R^2/MSE — the paper reports R^2 = 0.99 (Jetson) / 0.85 (Titan).
+Also validates the RNN case where T depends on N AND M.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.latency_model import LinearLatencyModel
+from benchmarks.common import calibrate_dataset
+
+
+def run(verbose: bool = True):
+    out = {}
+    csv = []
+    for ds, model_kind in (("en-zh", "transformer"), ("de-en", "bilstm")):
+        edge, cloud, n, m, t = calibrate_dataset(ds, reps=3)
+        # linear fit in M alone (Fig. 2a plots T vs M)
+        a = np.stack([m, np.ones_like(m)], 1)
+        coef, *_ = np.linalg.lstsq(a, t, rcond=None)
+        pred = a @ coef
+        ss_res = ((t - pred) ** 2).sum()
+        ss_tot = ((t - t.mean()) ** 2).sum()
+        r2_m = 1 - ss_res / max(ss_tot, 1e-12)
+        # full plane fit (Eq. 2 form)
+        plane = LinearLatencyModel().fit(n, m, t)
+        r2_plane = plane.r2(n, m, t)
+        out[ds] = {"r2_vs_M": float(r2_m), "r2_plane": float(r2_plane),
+                   "slope_ms_per_token": float(coef[0] * 1e3),
+                   "alpha_n": plane.alpha_n, "alpha_m": plane.alpha_m}
+        csv.append(f"fig2a_{ds}_{model_kind},{coef[0]*1e6:.1f},"
+                   f"r2_M={r2_m:.3f}|r2_plane={r2_plane:.3f}")
+        if verbose:
+            print(f"[fig2a] {ds} ({model_kind}): T vs M R^2={r2_m:.3f} "
+                  f"plane R^2={r2_plane:.3f} "
+                  f"slope={coef[0]*1e3:.2f} ms/token "
+                  f"alpha_N={plane.alpha_n*1e3:.3f} ms "
+                  f"alpha_M={plane.alpha_m*1e3:.3f} ms")
+    return out, csv
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 3: the linear N->M mapping quality per language pair.
+
+Fits gamma/delta on ground-truth pairs (after ParaCrawl-style
+pre-filtering, as the paper does) and reports R^2 / MSE on the
+bucket-averaged M-per-N curve the figure plots.  Paper numbers:
+R^2 = 0.99 on all three pairs; gamma < 1 for FR->EN and EN->ZH.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.length_regressor import LinearN2M, prefilter_pairs
+from repro.data.synthetic import make_corpus
+
+
+def run(size: int = 50_000, verbose: bool = True):
+    out = {}
+    csv = []
+    for pair in ("de-en", "fr-en", "en-zh"):
+        corpus = make_corpus(pair, size, seed=3)
+        n, m = prefilter_pairs(corpus.n, corpus.m_real)
+        reg = LinearN2M().fit(n, m)
+        uniq = np.array([u for u in np.unique(n) if (n == u).sum() >= 5])
+        avg = np.array([m[n == u].mean() for u in uniq])
+        r2 = reg.r2(uniq, avg)
+        mse = reg.mse(uniq, avg)
+        out[pair] = {"gamma": reg.gamma, "delta": reg.delta,
+                     "r2": r2, "mse": mse}
+        csv.append(f"fig3_{pair},0,gamma={reg.gamma:.3f}|r2={r2:.3f}"
+                   f"|mse={mse:.2f}")
+        if verbose:
+            print(f"[fig3] {pair}: gamma={reg.gamma:.3f} "
+                  f"delta={reg.delta:.2f} R^2={r2:.3f} MSE={mse:.2f}")
+    return out, csv
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Beyond-paper ablation: output-length estimator quality vs C-NMT gains.
+
+The paper's conclusion names "more advanced output length estimation
+methods" as future work.  This benchmark swaps the estimator inside the
+same CI decision rule and measures total execution time on the same
+request stream: corpus mean (=the paper's Naive), the paper's linear
+fit, Huber-robust fit (no pre-filter needed), and per-bucket conditional
+median / 0.75-quantile (hedging against under-prediction).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import (
+    BucketN2M,
+    HuberN2M,
+    LinearN2M,
+    MeanN2M,
+    prefilter_pairs,
+)
+from repro.core.profiles import make_profile
+from repro.core.scheduler import CNMTScheduler, OracleScheduler, StaticScheduler, EDGE, CLOUD
+from repro.core.simulator import make_stream, simulate
+from repro.data.synthetic import make_corpus
+
+
+def run(n_requests: int = 50_000, verbose: bool = True):
+    corpus = make_corpus("en-zh", n_requests + 10_000, seed=11,
+                         model_len_noise=2.5)
+    fit, eval_ = corpus.split(10_000)
+    edge = DeviceProfile("edge", LinearLatencyModel(5e-4, 9e-3, 0.01), 0.05)
+    cloud = DeviceProfile("cloud", edge.model.scaled(5.0), 0.08)
+    profile = make_profile("cp1", seed=11)
+    stream = make_stream(eval_.n, eval_.m_out, eval_.m_real,
+                         duration_s=profile.times_s[-1], seed=11)
+
+    nf, mf = prefilter_pairs(fit.n, fit.m_real)
+    estimators = {
+        "mean(naive)": MeanN2M().fit(nf, mf),
+        "linear(paper)": LinearN2M().fit(nf, mf),
+        "huber-nofilter": HuberN2M().fit(fit.n, fit.m_real),  # raw corpus!
+        "bucket-median": BucketN2M(quantile=0.5).fit(nf, mf),
+        "bucket-q75": BucketN2M(quantile=0.75).fit(nf, mf),
+    }
+
+    oracle = simulate(OracleScheduler(), stream, profile, edge, cloud, seed=1)
+    gw = simulate(StaticScheduler(EDGE), stream, profile, edge, cloud, seed=1)
+    sv = simulate(StaticScheduler(CLOUD), stream, profile, edge, cloud, seed=1)
+    out, csv = {}, []
+    for name, est in estimators.items():
+        sched = CNMTScheduler(edge=edge, cloud=cloud, n2m=est)
+        r = simulate(sched, stream, profile, edge, cloud, seed=1)
+        vs_oracle = r.vs(oracle)
+        out[name] = {"total_s": r.total_s, "vs_oracle": vs_oracle,
+                     "offload": r.offload_frac}
+        csv.append(f"predictors_{name},{r.total_s*1e6/n_requests:.1f},"
+                   f"vs_oracle={vs_oracle:+.2f}%")
+        if verbose:
+            print(f"[predictors] {name:15s}: total={r.total_s:9.1f}s "
+                  f"vs_oracle={vs_oracle:+6.2f}% offload={r.offload_frac:.2f}")
+    if verbose:
+        print(f"[predictors] statics: gw={gw.total_s:.1f}s sv={sv.total_s:.1f}s "
+              f"oracle={oracle.total_s:.1f}s")
+    return out, csv
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Aggregate the dry-run records into the §Roofline table.
+
+Reads roofline/*.json produced by ``repro.launch.dryrun`` and prints the
+per-(arch x shape x mesh) three-term table plus dominant bottleneck and
+useful-FLOPs ratio.  Also used to generate EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(path: str = "roofline"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def table(recs, mesh: str = "pod1"):
+    lines = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'mem/dev':>8s} {'fits':>4s} "
+           f"{'compute_s':>10s} {'memory_s':>9s} {'collect_s':>10s} "
+           f"{'dominant':>10s} {'MF/HLO':>6s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        tag = f"{r['arch']:22s} {r['shape']:12s}"
+        if "skipped" in r:
+            lines.append(f"{tag} {'skip: ' + r['skipped'][:58]}")
+            continue
+        if not r.get("ok"):
+            lines.append(f"{tag} FAIL {r.get('error', '')[:60]}")
+            continue
+        m, rl = r["memory"], r["roofline"]
+        ratio = rl.get("useful_flops_ratio") or float("nan")
+        lines.append(
+            f"{tag} {m['per_device_total']/1e9:7.1f}G "
+            f"{'Y' if m['fits_hbm'] else 'N':>4s} "
+            f"{rl['compute_s']:10.4f} {rl['memory_s']:9.4f} "
+            f"{rl['collective_s']:10.4f} {rl['dominant']:>10s} "
+            f"{ratio:6.2f}")
+    return "\n".join(lines)
+
+
+def run(path: str = "roofline", verbose: bool = True):
+    recs = load_records(path)
+    final = load_records("roofline_final") if os.path.isdir(
+        "roofline_final") and path == "roofline" else []
+    csv = []
+    for label, rr in (("baseline", recs), ("final", final)):
+        for r in rr:
+            if not r.get("ok"):
+                continue
+            rl = r["roofline"]
+            dom_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+            csv.append(
+                f"roofline[{label}]_{r['arch']}_{r['shape']}_{r['mesh']},"
+                f"{dom_s*1e6:.0f},"
+                f"dom={rl['dominant']}|fits={r['memory']['fits_hbm']}")
+    if verbose:
+        for label, rr in (("baseline TP+FSDP", recs),
+                          ("optimized --auto", final)):
+            for mesh in ("pod1", "pod2"):
+                if any(r.get("mesh") == mesh for r in rr):
+                    print(f"\n=== Roofline table ({mesh}, {label}) ===")
+                    print(table(rr, mesh))
+    return recs + final, csv
+
+
+if __name__ == "__main__":
+    run()

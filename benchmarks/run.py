@@ -1,0 +1,60 @@
+"""Benchmark driver — one function per paper table/figure + framework
+benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
+
+  table1     — paper Table I (the headline result)
+  fig2a      — T_exe linearity in M (measured on real JAX models)
+  fig3       — N->M regression quality per language pair
+  predictors — beyond-paper estimator ablation (paper's future work)
+  tiered     — beyond-paper: roofline-priced TPU tiers under C-NMT
+  roofline   — aggregated dry-run roofline table (if records exist)
+
+Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
+CI; the defaults reproduce the paper's 100k-request setting.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    fast = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+    n_req = 20_000 if fast else 100_000
+    csv_all = []
+    t0 = time.time()
+
+    from benchmarks import fig3
+    _, csv = fig3.run(size=20_000 if fast else 50_000)
+    csv_all += csv
+
+    from benchmarks import fig2a
+    _, csv = fig2a.run()
+    csv_all += csv
+
+    from benchmarks import table1
+    _, csv = table1.run(n_requests=n_req)
+    csv_all += csv
+
+    from benchmarks import predictors
+    _, csv = predictors.run(n_requests=min(n_req, 50_000))
+    csv_all += csv
+
+    from benchmarks import tiered
+    _, csv = tiered.run(n_requests=min(n_req, 50_000))
+    csv_all += csv
+
+    from benchmarks import roofline
+    recs, csv = roofline.run()
+    if recs:
+        csv_all += csv
+
+    print(f"\n[bench] total wall time {time.time()-t0:.1f}s")
+    print("\nname,us_per_call,derived")
+    for line in csv_all:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

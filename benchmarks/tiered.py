@@ -1,0 +1,72 @@
+"""Beyond-paper: C-NMT routing between TPU tiers priced from the dry-run.
+
+The paper characterizes devices by measuring them.  The framework can
+also price tiers it CANNOT measure: ``device_from_roofline`` converts the
+dry-run's analytic per-step cost into a T_exe(N, M) plane.  Here the
+"edge" tier is a small dense model on a single v5e chip and the "cloud"
+tier is the same family on a 256-chip pod behind a WAN — the C-NMT rule
+then routes per request exactly as in the paper, but the whole setup is
+derived from compiled artifacts instead of stopwatch runs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.calibration import device_from_roofline
+from repro.core.length_regressor import LinearN2M, prefilter_pairs
+from repro.core.profiles import make_profile
+from repro.core.scheduler import CNMTScheduler, NaiveScheduler
+from repro.core.simulator import make_stream, table1_row
+from repro.data.synthetic import make_corpus
+from repro.models.costs import forward_flops, kv_bytes_per_token
+
+
+def _tier(arch: str, *, chips: int, overhead_s: float, name: str):
+    cfg = get_config(arch)
+    # per-token costs from the analytic model the dry-run validates
+    prefill_flops = forward_flops(cfg, tokens=1, context=1, decode=False)
+    decode_flops = forward_flops(cfg, tokens=1, context=2048, decode=True)
+    decode_bytes = (cfg.param_counts()["active"] * 2
+                    + 2048 * kv_bytes_per_token(cfg))
+    return device_from_roofline(
+        name, prefill_flops_per_token=prefill_flops,
+        decode_flops_per_token=decode_flops,
+        decode_bytes_per_token=decode_bytes,
+        chips=chips, overhead_s=overhead_s)
+
+
+def run(n_requests: int = 50_000, verbose: bool = True):
+    # edge: qwen3-8b on 1 chip at the cell tower; cloud: qwen3-32b on a pod
+    edge = _tier("qwen3-8b", chips=1, overhead_s=0.002, name="edge-1chip")
+    cloud = _tier("qwen3-32b", chips=256, overhead_s=0.004,
+                  name="cloud-pod")
+    corpus = make_corpus("en-zh", n_requests + 5000, seed=21)
+    fit, eval_ = corpus.split(5000)
+    nf, mf = prefilter_pairs(fit.n, fit.m_real)
+    n2m = LinearN2M().fit(nf, mf)
+    profile = make_profile("cp1", seed=21)
+    stream = make_stream(eval_.n, eval_.m_out, eval_.m_real,
+                         duration_s=profile.times_s[-1], seed=21)
+    row = table1_row(
+        dataset="en-zh(tiered-tpu)", stream=stream, profile=profile,
+        edge=edge, cloud=cloud,
+        cnmt=CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m),
+        naive=NaiveScheduler(edge, cloud, nf, mf), seed=21)
+    csv = []
+    for pol in ("naive", "c-nmt"):
+        r = row[pol]
+        csv.append(f"tiered_{pol},{r['total_s']*1e6/n_requests:.1f},"
+                   f"vs_gw={r['vs_gw']:+.2f}%|vs_server={r['vs_server']:+.2f}%"
+                   f"|vs_oracle={r['vs_oracle']:+.2f}%")
+        if verbose:
+            print(f"[tiered] {pol:6s}: vs_edge={r['vs_gw']:+6.2f}% "
+                  f"vs_pod={r['vs_server']:+6.2f}% "
+                  f"vs_oracle={r['vs_oracle']:+6.2f}% "
+                  f"offload={r['offload_frac']:.2f}")
+    return row, csv
+
+
+if __name__ == "__main__":
+    run()

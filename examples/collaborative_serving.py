@@ -1,0 +1,64 @@
+"""End-to-end collaborative serving: REAL model at the edge, modelled
+cloud tier, live C-NMT routing (the paper's testbed in miniature).
+
+The edge gateway runs the actual BiLSTM seq2seq (JAX, this CPU); the
+cloud tier is its calibrated plane sped up 5x behind a replayed RTT
+trace.  200 requests stream through the CollaborativeEngine; compare
+total latency against always-edge / always-cloud.
+
+Run:  PYTHONPATH=src python examples/collaborative_serving.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.calibration import make_edge_cloud_pair, measure_seq2seq_grid
+from repro.core.length_regressor import LinearN2M, prefilter_pairs
+from repro.core.profiles import make_profile
+from repro.data.synthetic import LANGUAGE_PAIRS, make_corpus
+from repro.nmt import make_paper_model
+from repro.runtime.engine import CollaborativeEngine, Tier
+
+print("== calibrating the edge model (real measurements) ==")
+model, pair = make_paper_model("de-en", scale=0.15, vocab=1000,
+                               max_decode_len=64)
+params = model.init(jax.random.PRNGKey(0))
+translate = model.make_translate(params)
+lp = LANGUAGE_PAIRS["de-en"]
+n, m, t = measure_seq2seq_grid(
+    lambda toks, fl: translate(toks, forced_len=fl),
+    (4, 8, 16, 32), lambda nn: [max(2, int(0.5 * nn)), nn, 2 * nn],
+    reps=1, vocab=1000)
+edge_prof, cloud_prof = make_edge_cloud_pair(n, m, t, speedup=5.0)
+print(f"  plane: aN={edge_prof.model.alpha_n*1e3:.3f}ms "
+      f"aM={edge_prof.model.alpha_m*1e3:.3f}ms "
+      f"b={edge_prof.model.beta*1e3:.1f}ms")
+
+corpus = make_corpus("de-en", 2200, seed=1, with_tokens=True)
+fit, eval_ = corpus.split(2000)
+nf, mf = prefilter_pairs(fit.n, fit.m_real)
+n2m = LinearN2M().fit(nf, mf)
+profile = make_profile("cp2", seed=1)
+
+# the tiny demo model is far faster than the paper's Jetson-scale edge, so
+# use a LAN-class link (RTT/5) to keep the edge/cloud crossover inside the
+# corpus length range (benchmarks/table1.py reproduces the paper's WAN
+# setting with Jetson-scaled planes)
+engine = CollaborativeEngine(
+    edge=Tier(edge_prof, executor=lambda toks: translate(toks)),
+    cloud=Tier(cloud_prof),            # modelled (as the paper simulates)
+    n2m=n2m, rtt_fn=lambda t: float(profile.rtt_at(t)) * 0.2, seed=0)
+
+print("== streaming 200 requests through the gateway ==")
+t0 = time.perf_counter()
+for i in range(200):
+    engine.submit(eval_.src[i][:64], now_s=i * 0.5)
+stats = engine.stats()
+wall = time.perf_counter() - t0
+print(f"  mean latency {stats['mean_latency_s']*1e3:.1f}ms  "
+      f"p95 {stats['p95_latency_s']*1e3:.1f}ms  "
+      f"offloaded {stats['offload_frac']*100:.0f}%  "
+      f"(wall {wall:.1f}s)")
+print(f"  tx estimate now: {stats['tx_estimate_s']*1e3:.1f}ms")

@@ -1,0 +1,84 @@
+"""End-to-end training driver: train the Marian-style transformer on a
+synthetic parallel corpus for a few hundred steps with the full
+substrate — bucketing pipeline, AdamW + cosine schedule, grad clipping,
+checkpointing.  Loss is expected to drop steeply as the model learns the
+corpus statistics (it is synthetic, but the machinery is the real one).
+
+Run:  PYTHONPATH=src python examples/train_nmt.py [--steps 200]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import padded_batches
+from repro.data.synthetic import make_corpus
+from repro.nmt import MarianTransformer, TransformerConfig
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt", default="/tmp/repro_nmt_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(vocab_src=512, vocab_tgt=512, d_model=128,
+                            heads=4, d_ff=256, enc_layers=2, dec_layers=2,
+                            max_decode_len=64, max_src_len=64)
+    model = MarianTransformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    opt_cfg = AdamWConfig(lr=3e-4, weight_decay=0.01)
+    sched = cosine_schedule(3e-4, warmup_steps=20, total_steps=args.steps)
+
+    corpus = make_corpus("de-en", 4000, seed=0, with_tokens=True)
+    # clip token ids into the tiny vocab for this demo
+    src = [np.minimum(s, cfg.vocab_src - 1) for s in corpus.src]
+    tgt = [np.minimum(t, cfg.vocab_tgt - 1) for t in corpus.tgt]
+
+    @jax.jit
+    def step(params, opt, batch, lr):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        grads, gn = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt = adamw_update(params, grads, opt, lr=lr, cfg=opt_cfg)
+        return params, opt, loss, gn
+
+    t0 = time.time()
+    it = 0
+    losses = []
+    while it < args.steps:
+        for batch in padded_batches(src, tgt, batch_size=args.batch,
+                                    max_len=48, seed=it):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            lr = sched(opt.step)
+            params, opt, loss, gn = step(params, opt, batch, lr)
+            losses.append(float(loss))
+            if it % 25 == 0:
+                print(f"step {it:4d}  loss {losses[-1]:.4f}  "
+                      f"gnorm {float(gn):.2f}  lr {float(lr):.2e}")
+            it += 1
+            if it >= args.steps:
+                break
+    print(f"\nfirst-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f} "
+          f"({time.time()-t0:.0f}s)")
+    save_checkpoint(args.ckpt, {"params": params, "opt": opt},
+                    step=args.steps)
+    print(f"checkpoint written to {args.ckpt}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not drop"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""repro — C-NMT: Collaborative Inference framework for NMT, in JAX.
+
+Reproduction of Chen et al., "C-NMT: A Collaborative Inference Framework
+for Neural Machine Translation" (2022), extended into a production-grade
+multi-pod JAX serving/training framework.
+
+Layers
+------
+- ``repro.core``      — the paper's contribution: N->M length regression,
+                        linear latency planes, T_tx tracking, the CI
+                        decision rule, and the request-stream simulator.
+- ``repro.nmt``       — paper-faithful small seq2seq models (BiLSTM, GRU,
+                        Marian-style transformer) that run on CPU.
+- ``repro.models``    — the large-model stack (10 assigned architectures).
+- ``repro.kernels``   — Pallas TPU kernels (flash attention, flash decode,
+                        RWKV6 WKV, Mamba2 SSD) with pure-jnp oracles.
+- ``repro.sharding``  — PartitionSpec policies (DP/FSDP/TP/EP).
+- ``repro.runtime``   — serving engine (KV cache, prefill/decode,
+                        C-NMT-routed tiered serving).
+- ``repro.training``  — optimizer, train step, checkpointing.
+- ``repro.data``      — synthetic parallel-corpus pipeline.
+- ``repro.configs``   — per-architecture configuration registry.
+- ``repro.launch``    — production meshes, multi-pod dry-run, drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,31 @@
+"""whisper-large-v3 — encoder-decoder speech model [arXiv:2212.04356].
+
+Transformer backbone only (per assignment): the mel-spectrogram + conv
+frontend is a STUB — ``input_specs`` feeds precomputed frame embeddings
+(B, frames, d_model).  32+32 layers, d_model=1280, 20 heads (MHA:
+kv=20), d_ff=5120, vocab 51866.
+
+Decode shapes lower the decoder's serve_step (cross-attention KV is part
+of the decode state).  long_500k skipped: the decoder is full-attention
+with a 448-token design context (DESIGN.md §long_500k).
+"""
+
+from repro.models.config import EncoderConfig, LayerGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    arch_type="audio",
+    d_model=1280,
+    vocab_size=51866,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    layer_plan=(LayerGroup(mixer="attn", ffn="dense", count=32,
+                           cross_attn=True),),
+    encoder=EncoderConfig(num_layers=32, max_frames=1500),
+    is_encoder_decoder=True,
+    rope_theta=1e4,
+    supports_long_decode=False,
+    citation="arXiv:2212.04356 (Whisper); frontend stubbed per assignment",
+)

@@ -1,0 +1,56 @@
+"""The paper's contribution: collaborative-inference scheduling for NMT.
+
+Pipeline (paper §II):
+  1. ``length_regressor``  — linear N->M output-length estimate (Fig. 3).
+  2. ``latency_model``     — linear T_exe(N, M) plane per device (Fig. 2).
+  3. ``tx_estimator``      — online round-trip-time tracking (§II-C).
+  4. ``scheduler``         — the CI decision rule, Eq. (1)+(2).
+  5. ``simulator``         — the 100k-request experiment of §III.
+  6. ``profiles``          — RIPE-Atlas-like RTT connection profiles (Fig. 4).
+  7. ``calibration``       — offline T_exe characterization (measured or
+                             roofline-derived).
+"""
+
+from repro.core.length_regressor import (
+    LinearN2M,
+    RidgeN2M,
+    HuberN2M,
+    BucketN2M,
+    MeanN2M,
+    prefilter_pairs,
+)
+from repro.core.latency_model import LinearLatencyModel, DeviceProfile
+from repro.core.tx_estimator import TxEstimator
+from repro.core.scheduler import (
+    CNMTScheduler,
+    NaiveScheduler,
+    OracleScheduler,
+    StaticScheduler,
+    EDGE,
+    CLOUD,
+)
+from repro.core.profiles import ConnectionProfile, make_profile
+from repro.core.simulator import SimulationResult, simulate, table1_row
+
+__all__ = [
+    "LinearN2M",
+    "RidgeN2M",
+    "HuberN2M",
+    "BucketN2M",
+    "MeanN2M",
+    "prefilter_pairs",
+    "LinearLatencyModel",
+    "DeviceProfile",
+    "TxEstimator",
+    "CNMTScheduler",
+    "NaiveScheduler",
+    "OracleScheduler",
+    "StaticScheduler",
+    "EDGE",
+    "CLOUD",
+    "ConnectionProfile",
+    "make_profile",
+    "SimulationResult",
+    "simulate",
+    "table1_row",
+]

@@ -1,0 +1,124 @@
+"""Per-device execution-time planes: T_exe,i(N, M) of paper Eq. (2).
+
+The paper models inference latency of a seq2seq model on device *i* as a
+plane over input length N and output length M:
+
+    T_exe,i = alpha_N,i * N + alpha_M,i * M + beta_i
+
+* RNN encoder/decoder: both slopes positive (strict step dependency).
+* Transformer on a parallel device: alpha_N ~ 0 for short inputs (encoder
+  parallelizes), alpha_M > 0 and dominant (autoregressive masked decode).
+
+Coefficients come from a once-for-all offline characterization (paper
+§II-B last para).  Two calibration paths are provided:
+
+* measured   — fit on (N, M, T) samples from real runs
+               (``repro.core.calibration`` produces them on this CPU);
+* analytical — beyond paper: derive the plane from a roofline cost model
+               (FLOPs/byte terms per token) so the scheduler can target
+               hardware we cannot execute on (TPU pods); see
+               :meth:`LinearLatencyModel.from_roofline`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class LinearLatencyModel:
+    """T(N, M) = alpha_n * N + alpha_m * M + beta   (seconds)."""
+
+    alpha_n: float = 0.0
+    alpha_m: float = 0.0
+    beta: float = 0.0
+
+    def fit(self, n, m, t) -> "LinearLatencyModel":
+        """Least-squares fit on characterization samples (paper: 10k/device)."""
+        n = jnp.asarray(n, jnp.float32)
+        m = jnp.asarray(m, jnp.float32)
+        t = jnp.asarray(t, jnp.float32)
+        a = jnp.stack([n, m, jnp.ones_like(n)], axis=1)
+        coef, *_ = jnp.linalg.lstsq(a, t)
+        self.alpha_n = float(coef[0])
+        self.alpha_m = float(coef[1])
+        self.beta = float(coef[2])
+        return self
+
+    def predict(self, n, m):
+        n = jnp.asarray(n, jnp.float32)
+        m = jnp.asarray(m, jnp.float32)
+        return self.alpha_n * n + self.alpha_m * m + self.beta
+
+    def r2(self, n, m, t) -> float:
+        t = jnp.asarray(t, jnp.float32)
+        pred = self.predict(n, m)
+        ss_res = jnp.sum((t - pred) ** 2)
+        ss_tot = jnp.sum((t - jnp.mean(t)) ** 2)
+        return float(1.0 - ss_res / jnp.maximum(ss_tot, 1e-12))
+
+    def scaled(self, factor: float) -> "LinearLatencyModel":
+        """A device `factor`x faster (e.g. cloud = edge / speedup)."""
+        return LinearLatencyModel(
+            self.alpha_n / factor, self.alpha_m / factor, self.beta / factor
+        )
+
+    @classmethod
+    def from_roofline(
+        cls,
+        *,
+        prefill_flops_per_token: float,
+        decode_flops_per_token: float,
+        decode_bytes_per_token: float,
+        peak_flops: float,
+        hbm_bw: float,
+        overhead_s: float = 0.0,
+        mfu: float = 0.4,
+    ) -> "LinearLatencyModel":
+        """Beyond paper: build the plane analytically from roofline terms.
+
+        Per input token the encoder/prefill is compute-bound:
+            alpha_n = prefill_flops_per_token / (mfu * peak_flops)
+        Per output token the autoregressive decode step is
+        max(compute, memory)-bound:
+            alpha_m = max(decode_flops / (mfu*peak), decode_bytes / hbm_bw)
+
+        This is how the tiered-serving engine prices TPU pods it cannot
+        measure: the terms come from ``compiled.cost_analysis()`` of the
+        dry-run (see launch/dryrun.py).
+        """
+        alpha_n = prefill_flops_per_token / (mfu * peak_flops)
+        alpha_m = max(
+            decode_flops_per_token / (mfu * peak_flops),
+            decode_bytes_per_token / hbm_bw,
+        )
+        return cls(alpha_n=alpha_n, alpha_m=alpha_m, beta=overhead_s)
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    """A compute tier the scheduler can map an inference onto.
+
+    ``noise_frac`` models run-to-run latency variation (load, DVFS, ...):
+    the *true* execution time drawn in the simulator is
+    ``T * (1 + noise_frac * eps)`` with eps ~ N(0,1) truncated at +-3.
+    The paper's Fig. 2a shows exactly such bands around the linear fit.
+    """
+
+    name: str
+    model: LinearLatencyModel
+    noise_frac: float = 0.05
+
+    def true_time(self, n, m, rng: np.random.Generator) -> np.ndarray:
+        base = np.asarray(self.model.predict(n, m))
+        eps = np.clip(rng.standard_normal(base.shape), -3.0, 3.0)
+        return np.maximum(base * (1.0 + self.noise_frac * eps), 1e-6)
+
+
+def bytes_for_tokens(n_tokens, bytes_per_token: int = 2) -> np.ndarray:
+    """Paper §II: dictionary-index encoding needs <= 2 bytes/token."""
+    return np.asarray(n_tokens) * bytes_per_token

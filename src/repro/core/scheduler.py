@@ -1,0 +1,136 @@
+"""The C-NMT mapping decision — paper Eq. (1) and Eq. (2).
+
+Per request with input length N, choose the execution tier:
+
+    d_tgt = edge   if  T_exe,e(N, M_hat) <= T_tx + T_exe,c(N, M_hat)
+            cloud  otherwise
+
+with M_hat = gamma*N + delta from the length regressor.  The schedulers
+here are *policies* over (request, online state); the actual experiment
+loop lives in ``repro.core.simulator`` and the production serving path in
+``repro.runtime.engine``.
+
+Implemented policies
+--------------------
+* :class:`CNMTScheduler`   — the paper's technique (Eq. 1 + 2).
+* :class:`NaiveScheduler`  — same rule but M_hat = corpus mean (paper §III).
+* :class:`OracleScheduler` — lower bound: sees the *true* per-request times.
+* :class:`StaticScheduler` — pure-edge ("GW") / pure-cloud ("Server").
+
+Beyond paper
+------------
+* ``hedge_margin``: when the predicted edge/cloud gap is within ±margin of
+  the break-even point, prefer the tier with lower variance (the edge —
+  no network) — a cheap uncertainty-aware refinement of Eq. (1).
+* batched vectorized ``decide_batch`` used by the analytic simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.latency_model import DeviceProfile, bytes_for_tokens
+from repro.core.length_regressor import LinearN2M, MeanN2M
+from repro.core.tx_estimator import TxEstimator
+
+EDGE = 0
+CLOUD = 1
+
+
+@dataclasses.dataclass
+class Decision:
+    device: int           # EDGE or CLOUD
+    t_edge_pred: float
+    t_cloud_pred: float   # includes predicted T_tx
+    m_hat: float
+
+
+class BaseScheduler:
+    name = "base"
+
+    def decide(self, n: int, now_s: float, tx: TxEstimator) -> Decision:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class CNMTScheduler(BaseScheduler):
+    """Paper Eq. (1): compare edge plane vs cloud plane + T_tx at (N, M_hat)."""
+
+    edge: DeviceProfile
+    cloud: DeviceProfile
+    n2m: LinearN2M
+    bytes_per_token: int = 2
+    hedge_margin_s: float = 0.0   # 0 => paper-faithful
+    name: str = "c-nmt"
+
+    def decide(self, n: int, now_s: float, tx: TxEstimator) -> Decision:
+        m_hat = float(np.asarray(self.n2m.predict(float(n))))
+        m_hat = max(m_hat, 1.0)
+        t_e = float(np.asarray(self.edge.model.predict(float(n), m_hat)))
+        payload = float(bytes_for_tokens(n + m_hat, self.bytes_per_token))
+        t_c = float(np.asarray(self.cloud.model.predict(float(n), m_hat)))
+        t_c_tot = t_c + tx.tx_time(now_s, payload)
+        gap = t_c_tot - t_e  # >0 => edge wins
+        if abs(gap) <= self.hedge_margin_s:
+            device = EDGE  # hedge: local execution has no network variance
+        else:
+            device = EDGE if t_e <= t_c_tot else CLOUD
+        return Decision(device, t_e, t_c_tot, m_hat)
+
+    def decide_batch(self, n: np.ndarray, rtt: np.ndarray) -> np.ndarray:
+        """Vectorized Eq. (1) for the analytic simulator.
+
+        ``rtt`` is the scheduler's T_tx estimate (RTT + payload term added
+        here) per request.  Returns an int array of EDGE/CLOUD.
+        """
+        n = np.asarray(n, np.float64)
+        m_hat = np.maximum(np.asarray(self.n2m.predict(n), np.float64), 1.0)
+        t_e = np.asarray(self.edge.model.predict(n, m_hat), np.float64)
+        payload = bytes_for_tokens(n + m_hat, self.bytes_per_token)
+        t_tx = np.asarray(rtt, np.float64) + payload * 8.0 / 100e6
+        t_c = np.asarray(self.cloud.model.predict(n, m_hat), np.float64) + t_tx
+        gap = t_c - t_e
+        dev = np.where(t_e <= t_c, EDGE, CLOUD)
+        if self.hedge_margin_s > 0:
+            dev = np.where(np.abs(gap) <= self.hedge_margin_s, EDGE, dev)
+        return dev.astype(np.int32)
+
+
+def NaiveScheduler(edge: DeviceProfile, cloud: DeviceProfile, n_corpus, m_corpus,
+                   **kw) -> CNMTScheduler:
+    """Paper §III 'Naive': identical mapping rule, M_hat = corpus average."""
+    s = CNMTScheduler(edge=edge, cloud=cloud,
+                      n2m=MeanN2M().fit(n_corpus, m_corpus), **kw)
+    s.name = "naive"
+    return s
+
+
+@dataclasses.dataclass
+class OracleScheduler(BaseScheduler):
+    """Ideal lower bound (paper §III): picks the truly fastest device.
+
+    Sees true execution times and the true T_tx of each request — immune to
+    regression error, plane mis-fit and stale RTT estimates.
+    """
+
+    name: str = "oracle"
+
+    def decide_batch(self, t_edge_true: np.ndarray, t_cloud_true_with_tx: np.ndarray) -> np.ndarray:
+        return np.where(t_edge_true <= t_cloud_true_with_tx, EDGE, CLOUD).astype(np.int32)
+
+
+@dataclasses.dataclass
+class StaticScheduler(BaseScheduler):
+    """Pure-edge (GW) or pure-cloud (Server) baselines of paper Table I."""
+
+    device: int = EDGE
+
+    @property
+    def name(self) -> str:
+        return "gw" if self.device == EDGE else "server"
+
+    def decide_batch(self, n: np.ndarray, rtt: np.ndarray) -> np.ndarray:
+        return np.full(np.shape(n), self.device, dtype=np.int32)

@@ -1,0 +1,76 @@
+"""Online transmission-latency tracking (paper §II-C).
+
+T_tx varies over time with connection quality.  The paper attaches
+timestamps to every request/response exchanged with the cloud and keeps a
+recent estimate; because single end-nodes translate sporadically, the edge
+device is assumed to be a *gateway* aggregating many end-nodes, so samples
+arrive almost continuously.
+
+:class:`TxEstimator` implements that mechanism: it ingests timestamped RTT
+observations (obtained for free from offloaded requests) and serves the
+current estimate.  Two modes:
+
+* ``ewma`` (default) — exponentially-weighted moving average, the usual
+  network-RTT smoother; robust to single spikes.
+* ``last``           — most recent sample (what a bare timestamp scheme
+  gives you); kept as the paper-minimal variant.
+
+A staleness guard (beyond paper): if no sample arrived for
+``max_age_s``, the estimator injects a cheap synthetic probe sample —
+modelling the gateway pinging the server — so decisions never rely on an
+arbitrarily old estimate.  The simulator can disable probing to reproduce
+the paper-faithful behaviour exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class TxEstimator:
+    mode: str = "ewma"
+    alpha: float = 0.3            # EWMA weight of the newest sample
+    init_rtt_s: float = 0.050     # estimate before any sample arrives
+    max_age_s: Optional[float] = None  # None = paper-faithful (no probing)
+    bandwidth_bps: float = 100e6
+
+    def __post_init__(self):
+        if self.mode not in ("ewma", "last"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        self._estimate = self.init_rtt_s
+        self._last_update: Optional[float] = None
+        self.n_samples = 0
+        self.n_probes = 0
+
+    # -- ingestion ---------------------------------------------------------
+    def observe(self, timestamp_s: float, rtt_s: float) -> None:
+        """Record a timestamped RTT measurement from an offloaded request."""
+        if rtt_s <= 0:
+            raise ValueError("rtt must be positive")
+        if self.mode == "last" or self._last_update is None:
+            self._estimate = rtt_s if self.mode == "last" else (
+                rtt_s if self.n_samples == 0
+                else (1 - self.alpha) * self._estimate + self.alpha * rtt_s
+            )
+        else:
+            self._estimate = (1 - self.alpha) * self._estimate + self.alpha * rtt_s
+        self._last_update = timestamp_s
+        self.n_samples += 1
+
+    # -- queries -----------------------------------------------------------
+    def rtt(self, now_s: float, probe_fn=None) -> float:
+        """Current RTT estimate; optionally refresh via probe when stale."""
+        if (
+            self.max_age_s is not None
+            and probe_fn is not None
+            and (self._last_update is None or now_s - self._last_update > self.max_age_s)
+        ):
+            self.observe(now_s, float(probe_fn(now_s)))
+            self.n_probes += 1
+        return self._estimate
+
+    def tx_time(self, now_s: float, payload_bytes: float, probe_fn=None) -> float:
+        """T_tx estimate = RTT + payload serialization at the known bandwidth."""
+        return self.rtt(now_s, probe_fn) + payload_bytes * 8.0 / self.bandwidth_bps

@@ -1,0 +1,27 @@
+"""Data substrate: synthetic parallel corpora, tokenizer, batching."""
+
+from repro.data.synthetic import (
+    LanguagePair,
+    LANGUAGE_PAIRS,
+    ParallelCorpus,
+    make_corpus,
+)
+from repro.data.tokenizer import HashTokenizer
+from repro.data.pipeline import (
+    TokenBatcher,
+    padded_batches,
+    bucket_by_length,
+    lm_batches,
+)
+
+__all__ = [
+    "LanguagePair",
+    "LANGUAGE_PAIRS",
+    "ParallelCorpus",
+    "make_corpus",
+    "HashTokenizer",
+    "TokenBatcher",
+    "padded_batches",
+    "bucket_by_length",
+    "lm_batches",
+]

@@ -1,0 +1,87 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the
+kernel *body* runs in Python per grid cell, which validates the tiling
+and carry logic; on TPU the same `pl.pallas_call` lowers to Mosaic.
+Wrappers handle padding to block multiples and auto-select interpret
+mode off the default backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import rwkv6_wkv as _wkv
+from repro.kernels import ssd_scan as _ssd
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if not pad:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q (B,S,H,D); k/v (B,T,Hkv,D) -> (B,S,H,D). Pads S/T to blocks."""
+    interpret = _auto_interpret(interpret)
+    s = q.shape[1]
+    bq = min(block_q, max(8, 1 << (s - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    qp, pad_q = _pad_to(q, 1, bq)
+    kp, pad_k = _pad_to(k, 1, bk)
+    vp, _ = _pad_to(v, 1, bk)
+    # padded key positions must not contribute: causal masking handles the
+    # q-tail; for k-tail rely on causal mask (pad keys sit at positions
+    # > any real query). Non-causal inputs must be pre-padded by caller.
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, block_q=bq,
+                              block_k=bk, interpret=interpret)
+    return out[:, :s] if pad_q or pad_k else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q, k_cache, v_cache, lengths, *, block_s: int = 256,
+                 interpret: bool | None = None):
+    """q (B,H,D); caches (B,S,Hkv,D); lengths (B,) -> (B,H,D)."""
+    interpret = _auto_interpret(interpret)
+    s = k_cache.shape[1]
+    bs = min(block_s, max(8, 1 << (s - 1).bit_length()))
+    kp, _ = _pad_to(k_cache, 1, bs)
+    vp, _ = _pad_to(v_cache, 1, bs)
+    return _da.flash_decode(q, kp, vp, lengths, block_s=bs,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_wkv(r, k, v, log_w, u, s0=None, *, chunk: int = 32,
+              interpret: bool | None = None):
+    """Chunked WKV6. Shapes as in repro.kernels.ref.rwkv6_ref."""
+    interpret = _auto_interpret(interpret)
+    return _wkv.rwkv6_wkv(r, k, v, log_w, u, s0, chunk=chunk,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, b_in, c_in, s0=None, *, chunk: int = 64,
+             interpret: bool | None = None):
+    """Chunked Mamba2 SSD. Shapes as in repro.kernels.ref.ssd_ref."""
+    interpret = _auto_interpret(interpret)
+    return _ssd.ssd_scan(x, dt, a_log, b_in, c_in, s0, chunk=chunk,
+                         interpret=interpret)

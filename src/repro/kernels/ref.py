@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel (and for the chunked jnp model
+paths).  These are the simplest correct implementations — O(S^2)
+materialized attention, 1-step-at-a-time recurrences — used as the
+ground truth in kernel allclose tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------- flash attention --
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """Materialized softmax attention with GQA head grouping.
+
+    q (B,S,H,D), k/v (B,T,Hkv,D) -> (B,S,H,D).  f32 softmax.
+    """
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, s, hkv, rep, d).astype(jnp.float32)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qg,
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        # queries are the LAST s positions of the t-long key sequence
+        offset = t - s
+        mask &= j <= (i + offset)
+        if window is not None:
+            mask &= j > (i + offset - window)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale=None):
+    """Single-token decode oracle.
+
+    q (B,H,D); k/v_cache (B,T,Hkv,D); lengths (B,) = #valid cache slots.
+    """
+    b, h, d = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, rep, d).astype(jnp.float32)
+    scores = jnp.einsum("bgrd,btgd->bgrt", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(t)[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrt,btgd->bgrd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------------- rwkv6 --
+def rwkv6_ref(r, k, v, log_w, u, s0=None):
+    """Step-by-step WKV6 recurrence (the definitionally-correct form).
+
+    r/k/v (B,S,H,P), log_w (B,S,H,P) (<=0, f32), u (H,P).
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y (B,S,H,P), S_final (B,H,P,P)).
+    """
+    b, s, h, p = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(log_w.astype(jnp.float32))
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, p, p), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                     # (B,H,P) each
+        kv = jnp.einsum("bhp,bhq->bhpq", kt, vt)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, state + u[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, w))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_fin
+
+
+# ------------------------------------------------------------ mamba2 ssd --
+def ssd_ref(x, dt, a_log, b_in, c_in, s0=None):
+    """Step-by-step SSD recurrence.
+
+    x (B,S,H,P), dt (B,S,H) (post-softplus), a_log (H,) with A=-exp(a_log),
+    b/c (B,S,H,N).
+    H_t = exp(dt_t*A) H_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = H_t · C_t
+    Returns (y (B,S,H,P), H_final (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)                  # (B,H)
+        state = state * decay[..., None, None]
+        state = state + jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b_in.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c_in.astype(jnp.float32), 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_fin

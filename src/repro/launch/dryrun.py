@@ -1,0 +1,491 @@
+# The dry-run needs 512 placeholder devices; jax locks the device count on
+# first init, so these two lines MUST precede every other import.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) combination, lower + compile the
+real step function against the production mesh with abstract
+ShapeDtypeStruct inputs (no allocation), then record:
+
+* memory_analysis()  — per-device bytes: proves the sharding fits HBM;
+* cost_analysis()    — HLO FLOPs / bytes for the roofline terms;
+* the collective mix — parsed from the partitioned HLO text: bytes moved
+  by all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute (not in cost_analysis).
+
+Shapes lower the unit that really runs in production:
+  train_4k    -> train_step   (loss + grads + clip + AdamW update)
+  prefill_32k -> prefill_step (last logits + decode state)
+  decode_32k  -> serve_step   (ONE token vs a seq_len KV cache/state)
+  long_500k   -> serve_step   (sub-quadratic archs + documented SWA
+                               variants only; see configs.shape_supported)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all --mesh pod1 --out roofline/
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ARCH_NAMES, get_config, shape_supported
+from repro.launch.mesh import TPU_V5E, chips, make_production_mesh
+from repro.models.model import LM
+from repro.runtime.serving import make_prefill_step, make_serve_step
+from repro.sharding.policy import (
+    batch_specs,
+    decode_state_specs,
+    make_policy,
+    param_specs,
+    to_shardings,
+    train_state_specs,
+)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainState, init_train_state, make_train_step
+
+PARAM_DTYPE = jnp.bfloat16
+# >=100B params: bf16 AdamW moments (ZeRO-style memory knob, DESIGN.md §7)
+BF16_MOMENTS_THRESHOLD = 100e9
+
+
+def input_specs(cfg, shape_name: str, *, model: LM):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    i32 = jnp.int32
+    if kind == "train":
+        batch_tree = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "targets": jax.ShapeDtypeStruct((batch, seq), i32),
+        }
+        if cfg.is_encoder_decoder:
+            batch_tree["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder.max_frames, cfg.d_model), PARAM_DTYPE)
+        return batch_tree
+    if kind == "prefill":
+        tree = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+        if cfg.is_encoder_decoder:
+            tree["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder.max_frames, cfg.d_model), PARAM_DTYPE)
+        return tree
+    if kind == "decode":
+        state = jax.eval_shape(
+            lambda: model.init_decode_state(None, batch, seq,
+                                            dtype=PARAM_DTYPE))
+        return {"state": state,
+                "tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------ HLO collective scan
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TYPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64"
+                      r"|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """computation name -> list of body lines (HLO text format)."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)(?:\.clone)?\s*\(.*\)\s*->.*{",
+                     line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _while_edges(comps: dict):
+    """(parent_comp, body_comp, cond_comp) for every while op."""
+    edges = []
+    pat = re.compile(r"while\(.*\),\s*condition=%?([\w.\-]+),"
+                     r"\s*body=%?([\w.\-]+)")
+    for name, lines in comps.items():
+        for ln in lines:
+            m = pat.search(ln)
+            if m:
+                edges.append((name, m.group(2), m.group(1)))
+    return edges
+
+
+def _trip_count(cond_lines) -> int:
+    """Trip count from the condition computation: the constant compared
+    against the induction variable (scan conds are `i < N`)."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.search(r"%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)",
+                      ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" in ln and ("direction=LT" in ln or "direction=GT" in ln):
+            ops = re.search(r"compare\(([^)]*)\)", ln)
+            if ops:
+                for tok in ops.group(1).split(","):
+                    tok = tok.strip().lstrip("%")
+                    tok = tok.split(" ")[-1].lstrip("%")
+                    if tok in consts:
+                        return consts[tok]
+    # fall back: max constant in the tiny cond computation
+    return max(consts.values(), default=1)
+
+
+def _comp_multipliers(hlo_text: str) -> dict:
+    """computation -> effective execution count (nested whiles multiply).
+
+    XLA's cost_analysis counts while bodies ONCE; these multipliers are
+    how the roofline recovers per-step totals (EXPERIMENTS.md §Roofline
+    methodology).
+    """
+    comps = _split_computations(hlo_text)
+    edges = _while_edges(comps)
+    mult = {name: 0 for name in comps}
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    # computations reachable only as while bodies get parent_mult * trip;
+    # everything else (fusions, called comps) inherits parent's multiplier
+    # implicitly through cost_analysis, so we only track while bodies.
+    body_parent = {b: (p, c) for p, b, c in edges}
+
+    def resolve(name, seen=()):
+        if name not in body_parent:
+            return 1
+        if name in seen:
+            return 1
+        p, c = body_parent[name]
+        trips = _trip_count(comps.get(c, []))
+        return trips * resolve(p, seen + (name,))
+
+    return {name: resolve(name) for name in comps}, comps
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Bytes moved by collectives, with while-body trip-count scaling."""
+    mult, comps = _comp_multipliers(hlo_text)
+    stats = {c: {"bytes": 0, "count": 0} for c in _COLLECTIVES}
+    for cname, lines in comps.items():
+        k = mult.get(cname, 1)
+        for line in lines:
+            if "=" not in line:
+                continue
+            rhs = line.split("=", 1)[1].strip()
+            for c in _COLLECTIVES:
+                m = re.match(r"^(\([^)]*\)|\S+)\s+" + c + r"(-start|-done)?\(",
+                             rhs)
+                if m:
+                    if m.group(2) == "-done":
+                        break
+                    stats[c]["bytes"] += _shape_bytes(m.group(1)) * k
+                    stats[c]["count"] += k
+                    break
+    stats["total_bytes"] = sum(stats[c]["bytes"] for c in _COLLECTIVES)
+    return stats
+
+
+# --------------------------------------------------------------- lowering
+def build_lowered(arch: str, shape_name: str, mesh, *, remat=True,
+                  constrain_acts=True, layout: str = "tp",
+                  seq_parallel: bool = False, flash_decode_sp: bool = False,
+                  fsdp: bool = True):
+    cfg = get_config(arch, shape=shape_name)
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    pol = make_policy(mesh, batch_size=batch, layout=layout, fsdp=fsdp)
+
+    constrain = None
+    if constrain_acts:
+        # pin the residual stream's batch sharding through scan+remat;
+        # seq_parallel additionally shards the sequence dim over the model
+        # axis between layers (Megatron-SP): the saved per-layer carries
+        # shrink by the TP degree, at the cost of gather/scatter around
+        # each mixer (XLA inserts them during propagation).
+        seq_ax = pol.seq(seq) if (seq_parallel and kind != "decode") else None
+        act_sh = NamedSharding(
+            mesh, P(pol.batch(batch), seq_ax, None))
+
+        def constrain(t):
+            if t.ndim == 3:
+                return jax.lax.with_sharding_constraint(t, act_sh)
+            return t
+
+        # layer-internal chunk tensors (rwkv/mamba) keep batch sharding too
+        from repro.sharding import ctx as shard_ctx
+
+        def batch_constrainer(t, axis):
+            ax = pol.batch(t.shape[axis])
+            if ax is None:
+                return t
+            spec = [None] * t.ndim
+            spec[axis] = ax
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, P(*spec)))
+
+        shard_ctx.set_batch_constrainer(batch_constrainer)
+
+    model = LM(cfg, param_dtype=PARAM_DTYPE,
+               remat=remat and kind == "train", constrain=constrain)
+
+    params_abs = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = param_specs(pol, params_abs)
+    batch_abs = input_specs(cfg, shape_name, model=model)
+
+    if kind == "train":
+        moments = (jnp.bfloat16
+                   if cfg.param_counts()["total"] >= BF16_MOMENTS_THRESHOLD
+                   else jnp.float32)
+        state_abs = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0),
+                                     moments_dtype=moments))
+        state_specs = train_state_specs(pol, state_abs)
+        b_specs = batch_specs(pol, batch_abs)
+        step = make_train_step(model)
+        in_sh = (to_shardings(mesh, state_specs), to_shardings(mesh, b_specs))
+        out_sh = (to_shardings(mesh, state_specs), None)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        args = (state_abs, batch_abs)
+    elif kind == "prefill":
+        b_specs = batch_specs(pol, batch_abs)
+        prefill = make_prefill_step(model)
+
+        def step(params, batch_in):
+            return prefill(params, **batch_in)
+
+        # pin the produced decode state (otherwise XLA materializes the
+        # full KV tensors with whatever layout propagation guessed)
+        out_abs = jax.eval_shape(step, params_abs, batch_abs)
+        logits_spec = P(pol.batch(batch), pol.model(cfg.padded_vocab))
+        out_sh = (NamedSharding(mesh, logits_spec),
+                  to_shardings(mesh, decode_state_specs(pol, out_abs[1])))
+        in_sh = (to_shardings(mesh, p_specs), to_shardings(mesh, b_specs))
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        args = (params_abs, batch_abs)
+    else:  # decode
+        state_abs = batch_abs["state"]
+        st_specs = decode_state_specs(pol, state_abs)
+        tok_spec = P(pol.batch(batch), None)
+        serve = make_serve_step(model)
+        if flash_decode_sp and pol.seq(seq) and not cfg.sliding_window:
+            from repro.sharding import ctx as shard_ctx
+            shard_ctx.set_decode_seq_shard(
+                (mesh, "model", pol.batch(batch)))
+        in_sh = (to_shardings(mesh, p_specs),
+                 to_shardings(mesh, st_specs),
+                 NamedSharding(mesh, tok_spec))
+        out_sh = (None, to_shardings(mesh, st_specs))
+        jitted = jax.jit(serve, in_shardings=in_sh, out_shardings=out_sh)
+        args = (params_abs, state_abs, batch_abs["tokens"])
+
+    with mesh:
+        lowered = jitted.lower(*args)
+    return cfg, lowered
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, *, remat=True,
+            layout: str = "tp", seq_parallel: bool = False,
+            flash_decode_sp: bool = False, fsdp: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    n_chips = chips(mesh)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": n_chips, "layout": layout, "seq_parallel": seq_parallel,
+           "flash_decode_sp": flash_decode_sp, "fsdp": fsdp, "ok": False}
+    ok, reason = shape_supported(arch, shape_name)
+    if not ok:
+        rec["skipped"] = reason
+        return rec
+    t0 = time.time()
+    cfg, lowered = build_lowered(arch, shape_name, mesh, remat=remat,
+                                 layout=layout, seq_parallel=seq_parallel,
+                                 flash_decode_sp=flash_decode_sp, fsdp=fsdp)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    # ---- memory ----
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)
+        }
+        args_b = rec["memory"].get("argument_size_in_bytes", 0)
+        temp_b = rec["memory"].get("temp_size_in_bytes", 0)
+        rec["memory"]["per_device_total"] = args_b + temp_b
+        rec["memory"]["fits_hbm"] = bool(args_b + temp_b
+                                         <= TPU_V5E["hbm_bytes"])
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    # ---- cost ----
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if k in ("flops", "bytes accessed",
+                                "bytes accessed output", "transcendentals")
+                       or k.startswith("bytes accessed")}
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+
+    # ---- collectives (from partitioned HLO) ----
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_stats(hlo)
+    rec["hlo_bytes"] = len(hlo)
+
+    # ---- model-level reference numbers ----
+    pc = cfg.param_counts()
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    tokens = batch * seq if kind != "decode" else batch
+    rec["params_total"] = pc["total"]
+    rec["params_active"] = pc["active"]
+    rec["tokens_per_call"] = tokens
+    mult = 6 if kind == "train" else 2
+    rec["model_flops"] = float(mult * pc["active"] * tokens)
+
+    # ---- analytic step cost (whole mesh) ----
+    # XLA HloCostAnalysis counts while bodies once (scan undercounting);
+    # the analytic model is the roofline numerator, validated against
+    # cost_analysis on unrolled reduced configs in tests/test_costs.py.
+    from repro.models.costs import step_cost
+    moments_b = 2 if pc["total"] >= BF16_MOMENTS_THRESHOLD else 8
+    sc = step_cost(cfg, kind=kind, batch=batch, seq=seq,
+                   moments_bytes=moments_b)
+    rec["analytic"] = {"flops": sc.flops, "hbm_bytes": sc.hbm_bytes}
+    rec["ok"] = True
+    return rec
+
+
+def roofline_terms(rec: dict) -> dict:
+    """The three §Roofline terms, in seconds per step.
+
+    compute/memory use the ANALYTIC whole-mesh numbers divided over the
+    chips (cost_analysis undercounts scan bodies; raw per-partition
+    values stay in rec["cost"] for reference).  The collective term uses
+    the trip-count-scaled HLO collective bytes (per partition) over the
+    per-chip ICI bandwidth.
+    """
+    n = rec["chips"]
+    flops = rec.get("analytic", {}).get("flops", 0.0) / n
+    bytes_ = rec.get("analytic", {}).get("hbm_bytes", 0.0) / n
+    coll = rec.get("collectives", {}).get("total_bytes", 0)
+    t_compute = flops / TPU_V5E["peak_flops_bf16"]
+    t_memory = bytes_ / TPU_V5E["hbm_bw"]
+    t_coll = coll / TPU_V5E["ici_bw"]
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))
+    hlo_flops = rec.get("cost", {}).get("flops", 0.0)
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dom[1],
+        "useful_flops_ratio": (rec["model_flops"]
+                               / rec["analytic"]["flops"]
+                               if rec.get("analytic", {}).get("flops")
+                               else None),
+        "hlo_raw_flops_per_partition": hlo_flops,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["pod1", "pod2"], default="pod1")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="roofline")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--layout", choices=["tp", "ddp"], default="tp")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--flash-decode-sp", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--auto", action="store_true",
+                    help="per-combo best-known settings (EXPERIMENTS.md "
+                         "§Perf): ddp for <=3B archs on train/prefill, "
+                         "no-fsdp + shard_map flash-decode for decode")
+    ap.add_argument("--tag-suffix", default="")
+    args = ap.parse_args(argv)
+
+    combos = ([(a, s) for a in ARCH_NAMES for s in INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    os.makedirs(args.out, exist_ok=True)
+    SMALL_ARCHS = {"rwkv6-3b", "zamba2-1.2b", "whisper-large-v3"}
+    n_fail = 0
+    for arch, shape in combos:
+        layout, fsdp, fdsp = args.layout, not args.no_fsdp, \
+            args.flash_decode_sp
+        if args.auto:
+            kind = INPUT_SHAPES[shape][2]
+            if kind == "decode":
+                # TP-only weights only when the TP shard fits comfortably
+                # (<=4.5 GB): bigger models keep FSDP and pay the gathers
+                tp_shard_gb = get_config(arch).param_counts()["total"] \
+                    * 2 / 16 / 1e9
+                fsdp = tp_shard_gb > 4.5
+                fdsp = True           # shard_map split-cache flash decode
+            elif arch in SMALL_ARCHS:
+                layout = "ddp"        # head counts don't divide TP=16
+        tag = f"{arch}_{shape}_{args.mesh}{args.tag_suffix}"
+        try:
+            rec = analyze(arch, shape, args.mesh, remat=not args.no_remat,
+                          layout=layout, seq_parallel=args.seq_parallel,
+                          flash_decode_sp=fdsp, fsdp=fsdp)
+            if rec["ok"]:
+                rec["roofline"] = roofline_terms(rec)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "ok": False, "error": str(e),
+                   "traceback": traceback.format_exc()}
+            n_fail += 1
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        status = ("SKIP " + rec.get("skipped", "")) if "skipped" in rec else \
+            ("OK" if rec.get("ok") else "FAIL " + rec.get("error", "")[:200])
+        print(f"[dryrun] {tag}: {status}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,73 @@
+"""Training driver for the big-model stack.
+
+On real hardware this launches the sharded train loop on the production
+mesh; on this CPU it runs reduced configs end-to-end (the full configs
+are exercised by launch/dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import lm_batches
+from repro.models.model import LM
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import init_train_state, make_train_step
+from repro.training.optimizer import cosine_schedule
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = LM(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    sched = cosine_schedule(args.lr, warmup_steps=max(args.steps // 10, 1),
+                            total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(
+        model, lr_schedule=sched, opt_cfg=AdamWConfig(lr=args.lr)))
+
+    rng = np.random.default_rng(0)
+    stream = rng.integers(1, cfg.vocab_size,
+                          args.steps * args.batch * (args.seq + 1) * 2
+                          ).astype(np.int32)
+    t0, losses = time.time(), []
+    for i, batch in enumerate(lm_batches(stream, batch_size=args.batch,
+                                         seq_len=args.seq)):
+        if i >= args.steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i % 10 == 0:
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f}", flush=True)
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"in {time.time()-t0:.0f}s")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state, step=args.steps)
+        print(f"checkpoint: {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Large-model stack: unified config + composable LM over layer groups."""
+
+from repro.models.config import (
+    EncoderConfig,
+    LayerGroup,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SSMConfig,
+)
+from repro.models.model import LM
+
+__all__ = [
+    "EncoderConfig",
+    "LayerGroup",
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "SSMConfig",
+    "LM",
+]

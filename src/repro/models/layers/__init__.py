@@ -1,0 +1,1 @@
+"""Layer library: attention (GQA/MLA/SWA), MoE, Mamba2 SSD, RWKV6."""

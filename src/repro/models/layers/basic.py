@@ -1,0 +1,74 @@
+"""Norms, RoPE, embeddings, dense (SwiGLU) FFN — shared across the stack."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ norms --
+def rmsnorm_params(d):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    # norm statistics in f32 regardless of activation dtype
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale * p["g"]).astype(x.dtype)
+
+
+def head_rmsnorm(g, x, eps: float = 1e-5):
+    """qk-norm (qwen3/chameleon): RMS over the head dim of q/k."""
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale * g).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope --
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, Dh), positions (..., S) -> rotated x (same dtype)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,Dh/2)
+    cos = jnp.cos(angles)[..., None, :]               # (...,S,1,Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : dh // 2], xf[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ projections --
+def linear_params(key, d_in, d_out, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+                  * scale).astype(dtype)}
+
+
+def linear(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+def embed_params(key, vocab, d, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (vocab, d), jnp.float32)
+                  * d ** -0.5).astype(dtype)}
+
+
+# ------------------------------------------------------------------- ffn --
+def swiglu_params(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_params(k1, d_model, d_ff, dtype),
+        "up": linear_params(k2, d_model, d_ff, dtype),
+        "down": linear_params(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p, x):
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))

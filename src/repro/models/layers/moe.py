@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based dropping dispatch.
+
+TPU adaptation (DESIGN.md §6): instead of a GPU-style dynamic scatter or
+the GShard one-hot dispatch einsum (whose FLOPs explode as S*E*C*D for
+large E), tokens are *sorted by expert id* and packed into a fixed
+(E, capacity, D) buffer — all static shapes, gather/scatter only, so the
+matmul FLOPs stay ~capacity_factor * (top_k * S * 3 * D * F * 2), i.e.
+the honest active-expert compute.  This is the "dropping" strategy used
+by production TPU MoE stacks; with expert parallelism the (E, C, D)
+buffer shards over the model axis and XLA inserts the all-to-all.
+
+Routing: softmax router, exact top-k (jax.lax.top_k), optional gate
+re-normalization (DeepSeek/Qwen3 style), optional always-on shared
+experts (DeepSeek-V3 / Moonlight), and the switch-style load-balance
+auxiliary loss.
+
+Group semantics: dispatch happens within groups to bound sort sizes and
+keep the batch dim shardable — one group per batch row for sequence
+shapes, one global group for single-token decode.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.layers.basic import linear, linear_params, swiglu, swiglu_params
+
+
+def moe_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    mo: MoEConfig = cfg.moe
+    d, f, e = cfg.d_model, mo.d_ff_expert, mo.num_experts
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e), jnp.float32)
+                         * scale).astype(jnp.float32)},  # router math in f32
+        "experts_gate": {"w": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                               * scale).astype(dtype)},
+        "experts_up": {"w": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                             * scale).astype(dtype)},
+        "experts_down": {"w": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                               * (f ** -0.5)).astype(dtype)},
+    }
+    if mo.num_shared_experts:
+        # shared experts fused into one wide SwiGLU
+        p["shared"] = swiglu_params(ks[4], d, f * mo.num_shared_experts, dtype)
+    return p
+
+
+def _route(p, mo: MoEConfig, tokens):
+    """tokens (T,D) -> (top_w (T,k) f32, top_i (T,k) i32, probs (T,E) f32)."""
+    logits = (tokens.astype(jnp.float32) @ p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, mo.top_k)
+    if mo.norm_topk:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return top_w, top_i, probs
+
+
+def _build_dispatch(p, mo: MoEConfig, tokens, capacity: int):
+    """Sort-based dropping dispatch for one token group (vmapped).
+
+    tokens (T, D) -> (buf (E, C, D), metadata for the combine step).
+    The expert matmuls happen OUTSIDE the vmap (see moe_ffn) so the
+    launcher can pin the buffer's sharding — XLA otherwise shards the
+    buffer over the expert axis and turns these local gathers into
+    full-buffer collectives (EXPERIMENTS.md §Perf, MoE pair).
+    """
+    t, d = tokens.shape
+    k, e = mo.top_k, mo.num_experts
+    top_w, top_i, probs = _route(p, mo, tokens)
+
+    flat_e = top_i.reshape(t * k)                       # expert of assignment
+    flat_w = top_w.reshape(t * k)
+    order = jnp.argsort(flat_e)                         # stable, groups experts
+    es = flat_e[order]
+    # rank of each assignment within its expert
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts                # exclusive prefix
+    rank = jnp.arange(t * k) - starts[es]
+    keep = (rank < capacity).astype(tokens.dtype)
+    slot = es * capacity + jnp.clip(rank, 0, capacity - 1)
+
+    tok_of = order // k                                 # source token index
+    buf = jnp.zeros((e * capacity, d), tokens.dtype)
+    buf = buf.at[slot].add(tokens[tok_of] * keep[:, None])
+    meta = {"slot": slot, "keep": keep, "tok_of": tok_of,
+            "w": flat_w[order], "probs": probs, "top_i": top_i}
+    return buf.reshape(e, capacity, d), meta
+
+
+def _combine_group(out_flat, meta, t: int):
+    """out_flat (E*C, D) + metadata -> y (T, D) (vmapped)."""
+    contrib = out_flat[meta["slot"]] * (
+        meta["w"].astype(out_flat.dtype) * meta["keep"])[:, None]
+    return jax.ops.segment_sum(contrib, meta["tok_of"], num_segments=t)
+
+
+def load_balance_loss(probs, top_i, num_experts: int) -> jnp.ndarray:
+    """Switch-transformer aux loss: E * sum_e f_e * P_e (f32 scalar)."""
+    t = probs.shape[0]
+    assign = jax.nn.one_hot(top_i[:, 0], num_experts, dtype=jnp.float32)
+    f = assign.mean(0)                  # fraction routed (primary expert)
+    pbar = probs.mean(0)
+    return num_experts * jnp.sum(f * pbar)
+
+
+def moe_ffn(p, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> (y (B,S,D), aux_loss scalar f32).
+
+    Three phases so the sharding stays clean under pjit:
+      1. per-group dispatch (vmap over batch rows): local sort/pack;
+      2. expert SwiGLU on the packed (G, E, C, D) buffer with the batch
+         dim pinned (ctx.constrain_batch) — experts shard over `model`,
+         groups over `data`, no buffer collectives;
+      3. per-group combine (vmap): local gather + weighted segment sum.
+    """
+    from repro.sharding.ctx import constrain_batch
+
+    mo = cfg.moe
+    b, s, d = x.shape
+    if s == 1:
+        groups = x.reshape(1, b, d)     # decode: whole batch is one group
+    else:
+        groups = x                      # one group per batch row
+    tg = groups.shape[1]
+    capacity = max(1, int(tg * mo.top_k * mo.capacity_factor
+                          / mo.num_experts + 0.999))
+
+    bufs, meta = jax.vmap(
+        lambda tok: _build_dispatch(p, mo, tok, capacity)
+    )(groups)                            # (G,E,C,D)
+    bufs = constrain_batch(bufs)
+
+    dt = bufs.dtype
+    gg = jnp.einsum("gecd,edf->gecf", bufs, p["experts_gate"]["w"].astype(dt))
+    uu = jnp.einsum("gecd,edf->gecf", bufs, p["experts_up"]["w"].astype(dt))
+    out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gg) * uu,
+                     p["experts_down"]["w"].astype(dt))
+    out = constrain_batch(out)
+    out = out.reshape(out.shape[0], mo.num_experts * capacity, d)
+
+    y = jax.vmap(lambda o, m: _combine_group(o, m, tg))(out, meta)
+    y = y.reshape(b, s, d)
+
+    aux = load_balance_loss(meta["probs"].reshape(-1, mo.num_experts),
+                            meta["top_i"].reshape(-1, mo.top_k),
+                            mo.num_experts)
+    if mo.num_shared_experts:
+        y = y + swiglu(p["shared"], x)
+    return y, aux

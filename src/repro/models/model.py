@@ -1,0 +1,453 @@
+"""The composable LM: assembles layer groups into train / prefill / decode
+paths, for every assigned architecture family.
+
+Layer groups (``cfg.layer_plan``) are scanned with stacked params — a
+95-layer dense model lowers as ONE scanned block, keeping dry-run compile
+times and HLO size bounded.  Heterogeneous plans (dense-then-MoE,
+mamba+shared-attention) become several scanned groups executed in order.
+
+Three entry points (the units the launcher lowers):
+* ``train_logits``  — full-sequence causal forward, returns logits + MoE
+                      aux loss (+ MTP logits for deepseek-v3).
+* ``prefill``       — full-sequence forward that also materializes the
+                      decode state (KV caches / SSM states); returns
+                      last-position logits only (the (B,S,V) tensor is
+                      never built in serving).
+* ``decode_step``   — ONE token against the fixed-size decode state.
+
+Decode state layout: one entry per group, every leaf has leading dim
+``count`` (the group's layer count) so scans carry it uniformly.
+Sliding-window attention uses a ring-buffer cache of size ``window``
+(this is what makes the 500k-context decode shape allocatable for the
+dense-SWA variant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import LayerGroup, ModelConfig
+from repro.models.layers import attention as att
+from repro.models.layers import mamba2 as mb
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import rwkv6 as rk
+from repro.models.layers.basic import (
+    embed_params,
+    linear,
+    linear_params,
+    rmsnorm,
+    rmsnorm_params,
+    swiglu,
+    swiglu_params,
+)
+
+
+# ============================================================ param init ==
+def _init_block(key, cfg: ModelConfig, g: LayerGroup, dtype):
+    """Params for ONE layer of group ``g`` (mixer + ffn + norms)."""
+    km, kf = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": rmsnorm_params(cfg.d_model)}
+    if g.mixer in ("attn", "shared_attn"):
+        p["mixer"] = att.gqa_params(km, cfg, cross=g.cross_attn, dtype=dtype)
+    elif g.mixer == "mla":
+        p["mixer"] = att.mla_params(km, cfg, dtype=dtype)
+    elif g.mixer == "mamba2":
+        p["mixer"] = mb.mamba2_params(km, cfg, dtype=dtype)
+    elif g.mixer == "rwkv6":
+        p["mixer"] = rk.rwkv6_params(km, cfg, dtype=dtype)
+    else:
+        raise ValueError(g.mixer)
+    if g.cross_attn:
+        p["ln_x"] = rmsnorm_params(cfg.d_model)
+    if g.ffn != "none":
+        p["ln2"] = rmsnorm_params(cfg.d_model)
+    if g.ffn == "dense":
+        p["ffn"] = swiglu_params(kf, cfg.d_model, cfg.d_ff, dtype)
+    elif g.ffn == "moe":
+        p["ffn"] = moe_lib.moe_params(kf, cfg, dtype)
+    elif g.ffn == "rwkv_cm":
+        p["ffn"] = rk.channel_mix_params(kf, cfg, dtype)
+    return p
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, param_dtype=jnp.float32,
+                 remat: bool = False, constrain=None):
+        """``remat=True`` checkpoints each layer body: backward recomputes
+        layer internals, so training activation memory is O(layers x B x S
+        x D) carries instead of every intermediate (required for the
+        95-layer train_4k dry-runs to fit HBM).
+
+        ``constrain`` (optional) is applied to the (B,S,D) residual stream
+        after the embedding and after every layer — the launcher installs
+        jax.lax.with_sharding_constraint here so the batch sharding
+        survives scan+remat boundaries (XLA's propagation alone loses it
+        and replicates activations; see EXPERIMENTS.md §Perf iteration 1).
+        """
+        self.cfg = cfg.validate()
+        self.param_dtype = param_dtype
+        self.remat = remat
+        self.constrain = constrain if constrain is not None else (lambda x: x)
+
+    # ------------------------------------------------------------- init --
+    def init(self, key) -> Dict:
+        cfg, dtype = self.cfg, self.param_dtype
+        n_groups = len(cfg.layer_plan)
+        keys = jax.random.split(key, n_groups + 5)
+        params: Dict[str, Any] = {
+            "embed": embed_params(keys[0], cfg.padded_vocab, cfg.d_model,
+                                  dtype),
+            "final_norm": rmsnorm_params(cfg.d_model),
+            "groups": [],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = linear_params(keys[1], cfg.d_model,
+                                              cfg.padded_vocab, dtype)
+        shared_params = None
+        for gi, g in enumerate(cfg.layer_plan):
+            kg = keys[2 + gi]
+            if g.mixer == "shared_attn":
+                # one param set, reused by every shared group
+                if shared_params is None:
+                    shared_params = _init_block(kg, cfg, g, dtype)
+                params["groups"].append({})  # placeholder; weights live in params["shared_attn"]
+            else:
+                stacked = jax.vmap(
+                    lambda k: _init_block(k, cfg, g, dtype)
+                )(jax.random.split(kg, g.count))
+                params["groups"].append(stacked)
+        if shared_params is not None:
+            params["shared_attn"] = shared_params
+        if cfg.is_encoder_decoder:
+            enc_g = LayerGroup(mixer="attn", ffn="dense", count=cfg.encoder.num_layers)
+            params["encoder"] = {
+                "layers": jax.vmap(
+                    lambda k: _init_block(k, cfg, enc_g, dtype)
+                )(jax.random.split(keys[-2], cfg.encoder.num_layers)),
+                "final_norm": rmsnorm_params(cfg.d_model),
+            }
+        if cfg.mtp_depth:
+            g = cfg.layer_plan[-1]
+            params["mtp"] = {
+                "proj": linear_params(keys[-1], 2 * cfg.d_model, cfg.d_model,
+                                      dtype),
+                "block": _init_block(keys[-1], cfg, g, dtype),
+                "norm": rmsnorm_params(cfg.d_model),
+            }
+        return params
+
+    def params_spec(self, dtype=None) -> Dict:
+        """Abstract ShapeDtypeStruct pytree (used by the dry-run)."""
+        dt = dtype or self.param_dtype
+        model = LM(self.cfg, param_dtype=dt)
+        return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+    # ====================================================== full forward ==
+    def _block_full(self, p, cfg, g: LayerGroup, x, *, window, enc_kv=None,
+                    enc_mask=None, state_in=None, causal=True):
+        """One layer, full sequence. Returns (x, cache_entry, aux)."""
+        aux = jnp.zeros((), jnp.float32)
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if g.mixer in ("attn", "shared_attn"):
+            y, (k, v) = att.attn_full(p["mixer"], cfg, h, window=window,
+                                      causal=causal)
+            cache = {"k": k, "v": v}
+            if g.cross_attn:
+                xk, xv = att.encode_cross_kv(p["mixer"], cfg, enc_kv)
+                x = x + y
+                hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+                y = att.cross_attn(p["mixer"], cfg, hx, xk, xv, enc_mask)
+                cache.update({"xk": xk, "xv": xv})
+        elif g.mixer == "mla":
+            y, (ckv, kpe) = att.mla_full(p["mixer"], cfg, h)
+            cache = {"ckv": ckv, "kpe": kpe}
+        elif g.mixer == "mamba2":
+            y, st = mb.mamba2_full(p["mixer"], cfg, h)
+            cache = st._asdict()
+        elif g.mixer == "rwkv6":
+            y, st = rk.rwkv6_full(p["mixer"], cfg, h, state_in)
+            cache = st
+        x = x + y
+        if g.ffn != "none":
+            h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if g.ffn == "dense":
+                y = swiglu(p["ffn"], h)
+            elif g.ffn == "moe":
+                y, aux = moe_lib.moe_ffn(p["ffn"], cfg, h)
+            elif g.ffn == "rwkv_cm":
+                y, cache = rk.channel_mix_full(p["ffn"], cfg, h, cache)
+            x = x + y
+        return x, cache, aux
+
+    def _run_groups_full(self, params, x, *, enc_out=None, enc_mask=None,
+                         window=None, with_cache: bool):
+        """Scan every group over the sequence-parallel path."""
+        cfg = self.cfg
+        b = x.shape[0]
+        caches: List[Any] = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for gi, g in enumerate(cfg.layer_plan):
+            gp = params["groups"][gi]
+            w = window if window is not None else cfg.sliding_window
+            if g.mixer == "shared_attn":
+                sp = params["shared_attn"]
+                x, cache, aux = self._block_full(
+                    sp, cfg, g, x, window=w, enc_kv=enc_out, enc_mask=enc_mask)
+                aux_total += aux
+                caches.append(jax.tree.map(lambda c: c[None], cache)
+                              if with_cache else None)
+                continue
+            if g.mixer == "rwkv6":
+                st0 = rk.init_rwkv_state(cfg, b, x.dtype)
+
+                def body_rwkv(carry, lp):
+                    xx, auxc = carry
+                    xx, st, aux = self._block_full(lp, cfg, g, xx, window=w,
+                                                   state_in=st0)
+                    return (self.constrain(xx), auxc + aux), st
+
+                (x, aux_total), sts = jax.lax.scan(
+                    self._maybe_remat(body_rwkv), (x, aux_total), gp)
+                caches.append(sts if with_cache else None)
+                continue
+
+            def body(carry, lp):
+                xx, auxc = carry
+                xx, cache, aux = self._block_full(
+                    lp, cfg, g, xx, window=w, enc_kv=enc_out,
+                    enc_mask=enc_mask)
+                return (self.constrain(xx), auxc + aux), \
+                    (cache if with_cache else 0)
+
+            (x, aux_total), sts = jax.lax.scan(self._maybe_remat(body),
+                                               (x, aux_total), gp)
+            caches.append(sts if with_cache else None)
+        return x, caches, aux_total
+
+    def _maybe_remat(self, fn):
+        """Per-layer activation checkpointing for the scanned groups."""
+        return jax.checkpoint(fn, prevent_cse=False) if self.remat else fn
+
+    # -------------------------------------------------------- encoder ----
+    def encode(self, params, frames, frame_mask=None):
+        """Bidirectional encoder over precomputed frame/patch embeddings."""
+        cfg = self.cfg
+        b, t, _ = frames.shape
+        if frame_mask is None:
+            frame_mask = jnp.ones((b, t), jnp.float32)
+        x = frames
+        g = LayerGroup(mixer="attn", ffn="dense", count=cfg.encoder.num_layers)
+
+        def body(xx, lp):
+            xx, _, _ = self._block_full(lp, cfg, g, xx, window=None,
+                                        causal=False)
+            return xx, 0
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+        return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps), frame_mask
+
+    # ------------------------------------------------------ lm entries ---
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["w"].astype(x.dtype).T
+        else:
+            logits = linear(params["lm_head"], x)
+        if cfg.padded_vocab != cfg.vocab_size:
+            # mask Megatron-style vocab padding columns
+            col = jnp.arange(cfg.padded_vocab)
+            logits = jnp.where(col < cfg.vocab_size, logits,
+                               jnp.asarray(-1e30, logits.dtype))
+        return logits
+
+    def train_logits(self, params, tokens, *, frames=None, frame_mask=None):
+        """Full causal forward. Returns dict(logits, aux_loss[, mtp_logits])."""
+        cfg = self.cfg
+        x = self.constrain(params["embed"]["w"].astype(self.param_dtype)[tokens])
+        enc_out = enc_mask = None
+        if cfg.is_encoder_decoder:
+            enc_out, enc_mask = self.encode(params, frames, frame_mask)
+        x, _, aux = self._run_groups_full(params, x, enc_out=enc_out,
+                                          enc_mask=enc_mask, with_cache=False)
+        out = {"logits": self._logits(params, x), "aux_loss": aux}
+        if cfg.mtp_depth:
+            out["mtp_logits"] = self._mtp_logits(params, x, tokens)
+        return out
+
+    def _mtp_logits(self, params, h, tokens):
+        """DeepSeek-V3 multi-token prediction: depth-1 extra block that
+        predicts token t+2 from [h_t ; emb(token_{t+1})]."""
+        cfg = self.cfg
+        emb_next = params["embed"]["w"].astype(h.dtype)[
+            jnp.roll(tokens, -1, axis=1)]
+        g = cfg.layer_plan[-1]
+        z = linear(params["mtp"]["proj"],
+                   jnp.concatenate([rmsnorm(params["mtp"]["norm"], h,
+                                            cfg.norm_eps), emb_next], -1))
+        z, _, _ = self._block_full(params["mtp"]["block"], cfg, g, z,
+                                   window=cfg.sliding_window)
+        return self._logits(params, z)
+
+    # ---------------------------------------------------------- prefill --
+    def prefill(self, params, tokens, *, frames=None, frame_mask=None,
+                window=None, max_len: Optional[int] = None):
+        """Returns (last_logits (B,V), decode_state).
+
+        ``max_len`` pads the KV caches to decode capacity so decode_step
+        can append in place (slot == position discipline).
+        """
+        cfg = self.cfg
+        s = tokens.shape[1]
+        x = self.constrain(params["embed"]["w"].astype(self.param_dtype)[tokens])
+        enc_out = enc_mask = None
+        if cfg.is_encoder_decoder:
+            enc_out, enc_mask = self.encode(params, frames, frame_mask)
+        x, caches, _ = self._run_groups_full(
+            params, x, enc_out=enc_out, enc_mask=enc_mask, window=window,
+            with_cache=True)
+        if max_len is not None and max_len > s:
+            pad = max_len - s
+
+            def pad_seq(key_name, c):
+                if key_name in ("k", "v", "ckv", "kpe"):
+                    cfgpad = [(0, 0)] * c.ndim
+                    cfgpad[2] = (0, pad)      # (count,B,S,...) seq axis
+                    return jnp.pad(c, cfgpad)
+                return c
+
+            caches = [
+                {kn: pad_seq(kn, cv) for kn, cv in c.items()}
+                if isinstance(c, dict) else c
+                for c in caches
+            ]
+        state = {"caches": caches,
+                 "pos": jnp.full((tokens.shape[0],), s, jnp.int32)}
+        if cfg.is_encoder_decoder:
+            state["enc_mask"] = enc_mask
+        return self._logits(params, x[:, -1, :]), state
+
+    # ------------------------------------------------------ decode state --
+    def init_decode_state(self, params_or_none, batch: int, max_len: int,
+                          dtype=None) -> Dict:
+        """Fresh (empty) decode state with capacity ``max_len``."""
+        cfg = self.cfg
+        dt = dtype or self.param_dtype
+        caches: List[Any] = []
+        for g in cfg.layer_plan:
+            w = cfg.sliding_window
+            s_alloc = min(max_len, w) if (w and g.mixer in ("attn", "shared_attn")) else max_len
+            if g.mixer in ("attn", "shared_attn"):
+                c = {"k": jnp.zeros((g.count, batch, s_alloc,
+                                     cfg.num_kv_heads, cfg.head_dim), dt),
+                     "v": jnp.zeros((g.count, batch, s_alloc,
+                                     cfg.num_kv_heads, cfg.head_dim), dt)}
+                if g.cross_attn:
+                    t = cfg.encoder.max_frames
+                    c["xk"] = jnp.zeros((g.count, batch, t, cfg.num_kv_heads,
+                                         cfg.head_dim), dt)
+                    c["xv"] = jnp.zeros_like(c["xk"])
+                caches.append(c)
+            elif g.mixer == "mla":
+                m = cfg.mla
+                caches.append({
+                    "ckv": jnp.zeros((g.count, batch, max_len,
+                                      m.kv_lora_rank), dt),
+                    "kpe": jnp.zeros((g.count, batch, max_len,
+                                      m.qk_rope_head_dim), dt)})
+            elif g.mixer == "mamba2":
+                st = mb.init_mamba_state(cfg, batch, dt)
+                caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (g.count,) + a.shape),
+                    st._asdict()))
+            elif g.mixer == "rwkv6":
+                st = rk.init_rwkv_state(cfg, batch, dt)
+                caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (g.count,) + a.shape),
+                    st))
+        state = {"caches": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            state["enc_mask"] = jnp.ones((batch, cfg.encoder.max_frames),
+                                         jnp.float32)
+        return state
+
+    # -------------------------------------------------------- decode -----
+    def _block_decode(self, p, cfg, g: LayerGroup, x, cache, pos, enc_mask):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if g.mixer in ("attn", "shared_attn"):
+            w = cfg.sliding_window
+            s_alloc = cache["k"].shape[1]
+            # ring cache when the allocation is window-sized (long decode)
+            ring = bool(w) and s_alloc == w
+            from repro.sharding import ctx as shard_ctx
+            seq_shard = shard_ctx.decode_seq_shard()
+            if seq_shard is not None and not ring and not g.cross_attn:
+                mesh, seq_axis, batch_axes = seq_shard
+                y, ck, cv = att.attn_decode_seq_sharded(
+                    p["mixer"], cfg, h, cache["k"], cache["v"], pos,
+                    mesh=mesh, seq_axis=seq_axis, batch_axes=batch_axes)
+            else:
+                y, ck, cv = att.attn_decode(
+                    p["mixer"], cfg, h, cache["k"], cache["v"], pos,
+                    window=None if ring else w, ring=ring)
+            cache = dict(cache, k=ck, v=cv)
+            if g.cross_attn:
+                x = x + y
+                hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+                y = att.cross_attn(p["mixer"], cfg, hx, cache["xk"],
+                                   cache["xv"], enc_mask)
+        elif g.mixer == "mla":
+            y, ckv, kpe = att.mla_decode(p["mixer"], cfg, h, cache["ckv"],
+                                         cache["kpe"], pos)
+            cache = {"ckv": ckv, "kpe": kpe}
+        elif g.mixer == "mamba2":
+            y, st = mb.mamba2_decode(p["mixer"], cfg, h,
+                                     mb.MambaState(**cache))
+            cache = st._asdict()
+        elif g.mixer == "rwkv6":
+            y, st = rk.rwkv6_decode(p["mixer"], cfg, h, cache)
+            cache = st
+        x = x + y
+        if g.ffn != "none":
+            h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if g.ffn == "dense":
+                y = swiglu(p["ffn"], h)
+            elif g.ffn == "moe":
+                y, _ = moe_lib.moe_ffn(p["ffn"], cfg, h)
+            elif g.ffn == "rwkv_cm":
+                y, cache = rk.channel_mix_decode(p["ffn"], cfg, h, cache)
+            x = x + y
+        return x, cache
+
+    def decode_step(self, params, state, tokens):
+        """ONE new token per sequence. tokens (B,1) -> (logits (B,V), state)."""
+        cfg = self.cfg
+        pos = state["pos"]
+        enc_mask = state.get("enc_mask")
+        x = self.constrain(params["embed"]["w"].astype(self.param_dtype)[tokens])
+        new_caches: List[Any] = []
+        for gi, g in enumerate(cfg.layer_plan):
+            cache_g = state["caches"][gi]
+            if g.mixer == "shared_attn":
+                sp = params["shared_attn"]
+                c0 = jax.tree.map(lambda a: a[0], cache_g)
+                x, c1 = self._block_decode(sp, cfg, g, x, c0, pos, enc_mask)
+                new_caches.append(jax.tree.map(lambda a: a[None], c1))
+                continue
+
+            def body(xx, scanned):
+                lp, cache = scanned
+                xx, cache = self._block_decode(lp, cfg, g, xx, cache, pos,
+                                               enc_mask)
+                return xx, cache
+
+            x, cache_new = jax.lax.scan(body, x,
+                                        (params["groups"][gi], cache_g))
+            new_caches.append(cache_new)
+        logits = self._logits(params, x[:, 0, :])
+        return logits, {**state, "caches": new_caches, "pos": pos + 1}

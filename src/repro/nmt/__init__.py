@@ -1,0 +1,32 @@
+"""Paper-faithful NMT models (§III): the three architectures C-NMT was
+evaluated on, implemented in pure JAX and runnable on this CPU.
+
+* :class:`BiLSTMSeq2Seq`      — 2-layer BiLSTM encoder + attention LSTM
+                                decoder, hidden 500 (OpenNMT recipe,
+                                IWSLT'14 DE-EN in the paper).
+* :class:`GRUSeq2Seq`         — single-layer GRU encoder/decoder, hidden
+                                256 (OPUS-100 FR-EN in the paper).
+* :class:`MarianTransformer`  — Marian-style encoder-decoder transformer
+                                (OPUS-100 EN-ZH in the paper).
+
+All models expose the same surface:
+  ``init(key)``, ``encode``, ``decode_step``, ``translate`` (greedy,
+  autoregressive — the host loop whose wall-clock is linear in M),
+  and ``forward_teacher`` (batched teacher-forced logits for training).
+"""
+
+from repro.nmt.common import RNNConfig, TransformerConfig
+from repro.nmt.lstm import BiLSTMSeq2Seq
+from repro.nmt.gru import GRUSeq2Seq
+from repro.nmt.transformer import MarianTransformer
+from repro.nmt.registry import PAPER_MODELS, make_paper_model
+
+__all__ = [
+    "RNNConfig",
+    "TransformerConfig",
+    "BiLSTMSeq2Seq",
+    "GRUSeq2Seq",
+    "MarianTransformer",
+    "PAPER_MODELS",
+    "make_paper_model",
+]

@@ -1,0 +1,149 @@
+"""Shared building blocks for the paper-faithful seq2seq models."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokenizer import BOS_ID, EOS_ID
+
+
+@dataclasses.dataclass(frozen=True)
+class RNNConfig:
+    vocab_src: int = 8000
+    vocab_tgt: int = 8000
+    embed: int = 256
+    hidden: int = 256
+    layers: int = 1
+    max_decode_len: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab_src: int = 8000
+    vocab_tgt: int = 8000
+    d_model: int = 256
+    heads: int = 8
+    d_ff: int = 1024
+    enc_layers: int = 6
+    dec_layers: int = 6
+    max_decode_len: int = 256
+    max_src_len: int = 512
+
+
+# ------------------------------------------------------------------ init --
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def embed_init(key, vocab, dim, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, dim), dtype) * (dim ** -0.5)
+
+
+def dense_params(key, d_in, d_out):
+    kw, _ = jax.random.split(key)
+    return {"w": glorot(kw, (d_in, d_out)), "b": jnp.zeros((d_out,))}
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ----------------------------------------------------------------- cells --
+def lstm_params(key, d_in, hidden):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": glorot(k1, (d_in, 4 * hidden)),
+        "wh": glorot(k2, (hidden, 4 * hidden)),
+        "b": jnp.zeros((4 * hidden,)),
+    }
+
+
+def lstm_cell(p, carry, x):
+    """Standard LSTM cell; carry = (h, c)."""
+    h, c = carry
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def gru_params(key, d_in, hidden):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": glorot(k1, (d_in, 3 * hidden)),
+        "wh": glorot(k2, (hidden, 3 * hidden)),
+        "b": jnp.zeros((3 * hidden,)),
+    }
+
+
+def gru_cell(p, h, x):
+    """Standard GRU cell; carry = h."""
+    xz = x @ p["wx"] + p["b"]
+    hz = h @ p["wh"]
+    xr, xu, xn = jnp.split(xz, 3, axis=-1)
+    hr, hu, hn = jnp.split(hz, 3, axis=-1)
+    r = jax.nn.sigmoid(xr + hr)
+    u = jax.nn.sigmoid(xu + hu)
+    n = jnp.tanh(xn + r * hn)
+    h = (1.0 - u) * n + u * h
+    return h, h
+
+
+def scan_rnn(cell, params, init_carry, xs, reverse: bool = False):
+    """Run a cell over the leading (time) axis of ``xs``."""
+    def step(carry, x):
+        return cell(params, carry, x)
+    return jax.lax.scan(step, init_carry, xs, reverse=reverse)
+
+
+# ------------------------------------------------------------- attention --
+def luong_attention(query_h, enc_outs, enc_mask):
+    """Dot-product (Luong) attention: (H,), (N,H), (N,) -> context (H,)."""
+    scores = enc_outs @ query_h
+    scores = jnp.where(enc_mask > 0, scores, -1e30)
+    w = jax.nn.softmax(scores)
+    return w @ enc_outs
+
+
+# ----------------------------------------------------------------- decode --
+def greedy_decode(decode_step, init_state, max_len: int,
+                  forced_len: int | None = None):
+    """Host-side greedy autoregressive loop.
+
+    ``decode_step(state, token) -> (state, logits)`` must be jitted by the
+    caller.  Returns (m_out, tokens).  The Python loop is intentional: its
+    wall-clock is linear in the number of generated tokens M — the very
+    property (paper §II-A, Fig. 2a) C-NMT's latency plane relies on.
+
+    ``forced_len`` runs EXACTLY that many steps ignoring EOS — used by the
+    offline characterization to sweep a controlled (N, M) grid with real
+    model execution (an untrained model's natural stopping behaviour is
+    degenerate; timing is what's being measured, not translation quality).
+    """
+    token = jnp.asarray(BOS_ID, jnp.int32)
+    state = init_state
+    out = []
+    steps = forced_len if forced_len is not None else max_len
+    for _ in range(steps):
+        state, logits = decode_step(state, token)
+        token = jnp.argmax(logits).astype(jnp.int32)
+        tid = int(token)
+        if forced_len is None and tid == EOS_ID:
+            break
+        out.append(tid)
+    return len(out), jnp.asarray(out, jnp.int32)
+
+
+def cross_entropy(logits, targets, mask):
+    """Masked token-mean CE. logits (…,V), targets (…), mask (…)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

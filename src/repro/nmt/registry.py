@@ -1,0 +1,54 @@
+"""Registry of the paper's three evaluated model/dataset combinations."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.nmt.common import RNNConfig, TransformerConfig
+from repro.nmt.gru import GRUSeq2Seq
+from repro.nmt.lstm import BiLSTMSeq2Seq
+from repro.nmt.transformer import MarianTransformer
+
+# dataset -> (model family, paper hyper-params, language pair)
+PAPER_MODELS = {
+    # i) 2-layer BiLSTM, hidden 500, IWSLT'14 DE-EN
+    "de-en": ("bilstm", dict(layers=2, hidden=500, embed=500), "de-en"),
+    # ii) 1-layer GRU, hidden 256, OPUS-100 FR-EN
+    "fr-en": ("gru", dict(layers=1, hidden=256, embed=256), "fr-en"),
+    # iii) MarianMT transformer, OPUS-100 EN-ZH
+    "en-zh": ("marian", dict(d_model=512, heads=8, d_ff=2048,
+                             enc_layers=6, dec_layers=6), "en-zh"),
+}
+
+
+def make_paper_model(dataset: str, *, scale: float = 1.0,
+                     vocab: int = 8000, max_decode_len: int = 256):
+    """Instantiate the paper's model for ``dataset``.
+
+    ``scale`` shrinks widths/layers for CPU-budget-friendly calibration
+    runs (scale=1 is the paper's size). Latency *linearity* in N and M —
+    the property C-NMT exploits — is scale-invariant; the fitted
+    alpha/beta just shrink with it.
+    """
+    family, hp, pair = PAPER_MODELS[dataset]
+    s = lambda v: max(8, int(v * scale))
+    if family in ("bilstm", "gru"):
+        cfg = RNNConfig(
+            vocab_src=vocab, vocab_tgt=vocab,
+            embed=s(hp["embed"]), hidden=s(hp["hidden"]),
+            layers=hp["layers"], max_decode_len=max_decode_len,
+        )
+        model = BiLSTMSeq2Seq(cfg) if family == "bilstm" else GRUSeq2Seq(cfg)
+    else:
+        heads = min(8, max(2, int(8 * scale)))
+        d_model = max(heads * 8, (s(hp["d_model"]) // heads) * heads)
+        cfg = TransformerConfig(
+            vocab_src=vocab, vocab_tgt=vocab,
+            d_model=d_model, heads=heads,
+            d_ff=s(hp["d_ff"]),
+            enc_layers=max(1, int(hp["enc_layers"] * min(scale * 2, 1.0))),
+            dec_layers=max(1, int(hp["dec_layers"] * min(scale * 2, 1.0))),
+            max_decode_len=max_decode_len,
+        )
+        model = MarianTransformer(cfg)
+    return model, pair

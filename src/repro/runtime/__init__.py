@@ -1,0 +1,18 @@
+"""Serving runtime: prefill/decode steps, generation sessions, and the
+C-NMT-routed tiered serving engine."""
+
+from repro.runtime.serving import (
+    GenerationSession,
+    make_prefill_step,
+    make_serve_step,
+)
+from repro.runtime.engine import CollaborativeEngine, Tier, RequestResult
+
+__all__ = [
+    "GenerationSession",
+    "make_prefill_step",
+    "make_serve_step",
+    "CollaborativeEngine",
+    "Tier",
+    "RequestResult",
+]

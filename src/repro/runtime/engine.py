@@ -1,0 +1,124 @@
+"""The C-NMT technique as a first-class serving feature: a tiered engine
+that routes each request edge/cloud by the paper's decision rule.
+
+This is the production integration of ``repro.core``: the same
+CNMTScheduler, length regressor and TxEstimator, driving either
+
+* REAL execution — a tier carries an executor callable (e.g. a
+  ``repro.nmt`` translate fn, or a :class:`GenerationSession` for the
+  big-model stack on CPU-reduced configs), and the engine measures
+  actual wall-clock; or
+* MODELLED execution — a tier carries only its latency plane (fitted by
+  ``core.calibration`` or priced from dry-run rooflines via
+  ``device_from_roofline``), and the engine simulates the latency.  This
+  is how TPU-pod tiers we cannot run locally participate.
+
+Mixed setups (real edge + modelled cloud) mirror the paper's testbed,
+where the network was simulated but inference was real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.latency_model import DeviceProfile, bytes_for_tokens
+from repro.core.length_regressor import LinearN2M
+from repro.core.scheduler import CLOUD, EDGE, CNMTScheduler, Decision
+from repro.core.tx_estimator import TxEstimator
+
+
+@dataclasses.dataclass
+class Tier:
+    """One compute tier (edge gateway / cloud pod)."""
+
+    profile: DeviceProfile
+    executor: Optional[Callable] = None   # tokens -> (m_out, out_tokens)
+
+    def run(self, tokens: np.ndarray, m_hat: float,
+            rng: np.random.Generator) -> tuple[int, float]:
+        """Returns (output_len, execution_seconds)."""
+        if self.executor is not None:
+            t0 = time.perf_counter()
+            m_out, _ = self.executor(tokens)
+            return int(m_out), time.perf_counter() - t0
+        # modelled: draw the true time around the plane at predicted M
+        t = float(self.profile.true_time(float(len(tokens)), m_hat, rng))
+        return int(max(round(m_hat), 1)), t
+
+
+@dataclasses.dataclass
+class RequestResult:
+    req_id: int
+    device: int           # EDGE / CLOUD
+    n: int
+    m_out: int
+    latency_s: float      # execution + (tx if offloaded)
+    decision: Decision
+
+
+class CollaborativeEngine:
+    """Paper Eq. (1)/(2) in the serve path.
+
+    ``rtt_fn(now)`` models the live network (a ConnectionProfile's
+    ``rtt_at`` in experiments; a real prober in deployment).  The engine
+    feeds the TxEstimator exactly like §II-C: every offloaded request
+    contributes a timestamped RTT sample.
+    """
+
+    def __init__(self, *, edge: Tier, cloud: Tier, n2m: LinearN2M,
+                 rtt_fn: Callable[[float], float],
+                 bytes_per_token: int = 2,
+                 hedge_margin_s: float = 0.0,
+                 seed: int = 0):
+        self.edge, self.cloud = edge, cloud
+        self.scheduler = CNMTScheduler(
+            edge=edge.profile, cloud=cloud.profile, n2m=n2m,
+            bytes_per_token=bytes_per_token, hedge_margin_s=hedge_margin_s)
+        self.tx = TxEstimator(init_rtt_s=float(rtt_fn(0.0)))
+        self.rtt_fn = rtt_fn
+        self.rng = np.random.default_rng(seed)
+        self.results: List[RequestResult] = []
+        self._t0 = time.perf_counter()
+        self._next_id = 0
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def submit(self, tokens: np.ndarray, *, now_s: Optional[float] = None
+               ) -> RequestResult:
+        now = self._now() if now_s is None else now_s
+        n = int(len(tokens))
+        d = self.scheduler.decide(n, now, self.tx)
+        if d.device == EDGE:
+            m_out, exec_s = self.edge.run(tokens, d.m_hat, self.rng)
+            latency = exec_s
+        else:
+            m_out, exec_s = self.cloud.run(tokens, d.m_hat, self.rng)
+            rtt = float(self.rtt_fn(now))
+            payload = float(bytes_for_tokens(n + m_out,
+                                             self.scheduler.bytes_per_token))
+            latency = exec_s + rtt + payload * 8.0 / self.tx.bandwidth_bps
+            self.tx.observe(now, rtt)      # §II-C timestamp mechanism
+        res = RequestResult(self._next_id, d.device, n, m_out, latency, d)
+        self._next_id += 1
+        self.results.append(res)
+        return res
+
+    # ------------------------------------------------------------- stats --
+    def stats(self) -> Dict[str, float]:
+        if not self.results:
+            return {}
+        lat = np.array([r.latency_s for r in self.results])
+        off = np.array([r.device == CLOUD for r in self.results])
+        return {
+            "requests": len(self.results),
+            "total_latency_s": float(lat.sum()),
+            "mean_latency_s": float(lat.mean()),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "offload_frac": float(off.mean()),
+            "tx_estimate_s": self.tx.rtt(0.0),
+        }

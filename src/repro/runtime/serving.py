@@ -1,0 +1,76 @@
+"""Serving-side compute units.
+
+``make_prefill_step`` / ``make_serve_step`` return exactly the functions
+the multi-pod dry-run lowers for the prefill/decode input shapes — one
+new token against a KV cache (or SSM state) of the configured context.
+
+:class:`GenerationSession` drives them for real CPU generation (smoke
+scale): prefill once, then greedy decode with EOS handling — the serving
+analog of ``repro.nmt``'s translate loop.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS_ID
+from repro.models.model import LM
+
+
+def make_prefill_step(model: LM, *, max_len: Optional[int] = None) -> Callable:
+    """prefill_step(params, tokens[, frames]) -> (last_logits, decode_state)."""
+
+    def prefill_step(params, tokens, frames=None):
+        kw = {"frames": frames} if frames is not None else {}
+        return model.prefill(params, tokens, max_len=max_len, **kw)
+
+    return prefill_step
+
+
+def make_serve_step(model: LM) -> Callable:
+    """serve_step(params, state, tokens (B,1)) -> (logits (B,V), state).
+
+    ONE new token per sequence against the fixed-capacity decode state —
+    the unit lowered for decode_32k / long_500k.
+    """
+
+    def serve_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    return serve_step
+
+
+class GenerationSession:
+    """Greedy batched generation on CPU (reduced configs)."""
+
+    def __init__(self, model: LM, params, *, max_len: int = 64):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(model, max_len=max_len))
+        self._step = jax.jit(make_serve_step(model))
+
+    def generate(self, tokens: np.ndarray, *, max_new: int = 16,
+                 frames: Optional[np.ndarray] = None) -> np.ndarray:
+        """tokens (B,S) int32 -> generated (B,<=max_new) (EOS-truncated)."""
+        b, s = tokens.shape
+        if s + max_new > self.max_len:
+            raise ValueError("exceeds session capacity")
+        args = (self.params, jnp.asarray(tokens))
+        logits, state = (self._prefill(*args, jnp.asarray(frames))
+                         if frames is not None else self._prefill(*args))
+        out = []
+        done = np.zeros((b,), bool)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for _ in range(max_new):
+            out.append(np.asarray(tok)[:, 0])
+            done |= out[-1] == EOS_ID
+            if done.all():
+                break
+            logits, state = self._step(self.params, state, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return np.stack(out, axis=1)

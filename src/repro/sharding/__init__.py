@@ -1,0 +1,22 @@
+"""Sharding policies: PartitionSpec assignment for params, optimizer
+state, batches and decode states."""
+
+from repro.sharding.policy import (
+    ShardingPolicy,
+    batch_specs,
+    decode_state_specs,
+    make_policy,
+    param_specs,
+    to_shardings,
+    train_state_specs,
+)
+
+__all__ = [
+    "ShardingPolicy",
+    "make_policy",
+    "param_specs",
+    "batch_specs",
+    "decode_state_specs",
+    "train_state_specs",
+    "to_shardings",
+]

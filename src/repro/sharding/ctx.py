@@ -1,0 +1,42 @@
+"""Process-global activation-sharding hook.
+
+Layers are sharding-agnostic; the launcher installs a constrainer here
+before tracing so that large layer-internal tensors (RWKV/Mamba chunk
+tensors, which XLA's propagation otherwise replicates across the mesh)
+keep their batch sharding.  No-op unless installed — CPU tests and
+single-device runs never touch jax.sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+_CONSTRAINER: Optional[Callable] = None
+# (mesh, seq_axis_name, batch_axes) for the shard_map flash-decode path
+_DECODE_SEQ_SHARD: Optional[Tuple] = None
+
+
+def set_batch_constrainer(fn: Optional[Callable]) -> None:
+    """fn(x, batch_axis) -> x with a sharding constraint applied."""
+    global _CONSTRAINER
+    _CONSTRAINER = fn
+
+
+def constrain_batch(x, batch_axis: int = 0):
+    if _CONSTRAINER is None:
+        return x
+    return _CONSTRAINER(x, batch_axis)
+
+
+def set_decode_seq_shard(info: Optional[Tuple]) -> None:
+    """(mesh, seq_axis, batch_axes) or None.  When set, GQA decode uses
+    the shard_map flash-decode path: each model-axis shard attends to its
+    local cache slice and the shards combine (max, sum, weighted-acc)
+    softmax stats — O(B*H*D) traffic per layer instead of gathering the
+    cache/scores (EXPERIMENTS.md §Perf, decode pair)."""
+    global _DECODE_SEQ_SHARD
+    _DECODE_SEQ_SHARD = info
+
+
+def decode_seq_shard() -> Optional[Tuple]:
+    return _DECODE_SEQ_SHARD

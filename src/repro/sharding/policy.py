@@ -1,0 +1,235 @@
+"""PartitionSpec policy — the baseline FSDP+TP(+EP) layout.
+
+Axes
+----
+* ``model`` — tensor parallel: attention heads / FFN width / EXPERTS.
+* ``data``  — batch data-parallel AND the FSDP shard axis for params &
+  optimizer moments (ZeRO-3 style: params are gathered per layer by XLA
+  where needed).
+* ``pod``   — multi-pod: extends both the batch axis and the FSDP axis
+  (so 671B + moments fits per chip at 512 devices).
+
+Rules are name-based over tree key paths, with a divisibility guard:
+an axis is only assigned if the dimension divides evenly; otherwise the
+dim is replicated (GSPMD could pad uneven shardings, but keeping the
+baseline clean makes the roofline collectives readable).
+
+Layer-stacked leaves (groups scanned over L) get a leading None.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# weight names whose LAST TWO dims are (in=fsdp, out=model)
+_TP_OUT = {
+    "q", "k", "v", "g", "xq", "xk", "xv", "q_down", "q_up", "kv_down",
+    "k_up", "v_up", "in_proj", "rk", "kk", "w_down", "w_up", "gate", "up",
+}
+# weight names whose LAST TWO dims are (in=model, out=fsdp)
+_TP_IN = {"o", "xo", "out_proj", "down", "vv"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    # logical axis assignments (tuples feed PartitionSpec directly)
+    batch_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    model_axes: Tuple[str, ...] = ("model",)
+    seq_axes: Tuple[str, ...] = ("model",)   # decode-cache sequence axis
+    shard_batch: bool = True                 # False for batch=1 shapes
+
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def _fit(self, axes: Tuple[str, ...], dim: int) -> Optional[Tuple[str, ...]]:
+        return axes if axes and dim % self.axis_size(axes) == 0 else None
+
+    # -------------------------------------------------------------- batch --
+    def batch(self, dim: int):
+        if not self.shard_batch:
+            return None
+        return self._fit(self.batch_axes, dim)
+
+    def fsdp(self, dim: int):
+        return self._fit(self.fsdp_axes, dim)
+
+    def model(self, dim: int):
+        return self._fit(self.model_axes, dim)
+
+    def seq(self, dim: int):
+        return self._fit(self.seq_axes, dim)
+
+
+def make_policy(mesh: Mesh, *, batch_size: int,
+                layout: str = "tp", fsdp: bool = True) -> ShardingPolicy:
+    """Baseline layouts.
+
+    * ``tp``  — batch over (pod,data); tensor-parallel weights + vocab +
+      decode-cache sequence over ``model``; FSDP over (data,pod).
+    * ``ddp`` — no tensor parallelism: batch over as many axes as divide
+      it (up to pod*data*model), FSDP over (data,pod).  Right for models
+      whose head counts don't divide the TP axis (rwkv6's 40 heads,
+      whisper's 20) and for <=3B models where TP gathers dominate —
+      see EXPERIMENTS.md §Perf.
+    """
+    axes = set(mesh.axis_names)
+    # fsdp=False: weights live TP-sharded but replicated across data —
+    # right for decode, where per-token FSDP weight gathers dominate the
+    # collective roofline term (EXPERIMENTS.md §Perf, decode pair).
+    fsdp_axes = tuple(a for a in ("data", "pod") if a in axes) if fsdp else ()
+    if layout == "tp":
+        batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+        model_axes: Tuple[str, ...] = ("model",)
+    elif layout == "ddp":
+        model_axes = ()
+        batch_axes = ()
+        for cand in (("pod", "data", "model"), ("pod", "data"),
+                     ("data", "model"), ("data",)):
+            cand = tuple(a for a in cand if a in axes)
+            if cand and batch_size % int(
+                    np.prod([mesh.shape[a] for a in cand])) == 0:
+                batch_axes = cand
+                break
+    else:
+        raise ValueError(layout)
+    pol = ShardingPolicy(
+        mesh=mesh,
+        batch_axes=batch_axes,
+        fsdp_axes=fsdp_axes,
+        model_axes=model_axes,
+        seq_axes=model_axes,
+        shard_batch=True,
+    )
+    if not batch_axes or batch_size % pol.axis_size(batch_axes):
+        # batch=1 long-context shape: replicate batch, shard seq instead
+        pol = dataclasses.replace(
+            pol, shard_batch=False,
+            seq_axes=model_axes or (tuple(a for a in ("model",)
+                                          if a in axes)))
+    return pol
+
+
+def _path_names(path) -> list:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return names
+
+
+def _spec_for_param(pol: ShardingPolicy, path, leaf) -> P:
+    names = _path_names(path)
+    shape = leaf.shape
+    nd = len(shape)
+    # leaf name = nearest containing weight name ("w" leaves live in dicts
+    # named after the projection)
+    owner = None
+    for n in reversed(names):
+        if n not in ("w", "b", "g"):
+            owner = n
+            break
+    leafname = names[-1] if names else ""
+
+    def pad(spec_tail):
+        return P(*([None] * (nd - len(spec_tail)) + spec_tail))
+
+    if owner == "embed" and leafname == "w":           # (V, D)
+        return pad([pol.model(shape[-2]), pol.fsdp(shape[-1])])
+    if owner == "lm_head" and leafname == "w":         # (D, V): V = TP axis
+        return pad([pol.fsdp(shape[-2]), pol.model(shape[-1])])
+    if owner == "router":
+        return pad([pol.fsdp(shape[-2]), None])
+    if owner in ("experts_gate", "experts_up", "experts_down") \
+            and leafname == "w":
+        # MoE expert-stacked weights (E, D, F)/(E, F, D): experts = model
+        if owner == "experts_down":
+            return pad([pol.model(shape[-3]), None, pol.fsdp(shape[-1])])
+        return pad([pol.model(shape[-3]), pol.fsdp(shape[-2]), None])
+    if owner in _TP_IN and nd >= 2 and leafname == "w":
+        return pad([pol.model(shape[-2]), pol.fsdp(shape[-1])])
+    if owner in _TP_OUT and nd >= 2 and leafname == "w":
+        return pad([pol.fsdp(shape[-2]), pol.model(shape[-1])])
+    if leafname == "conv_w" and nd >= 2:
+        return pad([None, pol.model(shape[-1])])
+    # norms, biases, scalars, mix coefficients, u/w0/a_log/...: replicate
+    return P(*([None] * nd))
+
+
+def param_specs(pol: ShardingPolicy, params_shape) -> Any:
+    """PartitionSpec pytree mirroring an (abstract) params pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_param(pol, path, leaf), params_shape)
+
+
+def batch_specs(pol: ShardingPolicy, batch_shape) -> Any:
+    """Input batch: shard the leading batch dim, replicate the rest."""
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(*([pol.batch(leaf.shape[0])] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def decode_state_specs(pol: ShardingPolicy, state_shape) -> Any:
+    """Decode state: batch over data; cache SEQUENCE over the model axis
+    (flash-decode style — attention contracts over the sharded axis and
+    XLA inserts the psum), SSM/RWKV state heads over model when they fit.
+    """
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        leafname = names[-1] if names else ""
+        shape = leaf.shape
+        if leafname in ("k", "v"):        # (count,B,S,Hkv,Dh)
+            return P(None, pol.batch(shape[1]), pol.seq(shape[2]), None, None)
+        if leafname in ("xk", "xv"):      # (count,B,T,Hkv,Dh) cross-attn
+            return P(None, pol.batch(shape[1]), None, None, None)
+        if leafname in ("ckv", "kpe"):    # (count,B,S,rank)
+            return P(None, pol.batch(shape[1]), pol.seq(shape[2]), None)
+        if leafname == "ssm":             # (count,B,nh,P,N)
+            return P(None, pol.batch(shape[1]), pol.model(shape[2]), None, None)
+        if leafname == "wkv":             # (count,B,H,P,P)
+            return P(None, pol.batch(shape[1]), pol.model(shape[2]), None, None)
+        if leafname in ("conv", "shift_tm", "shift_cm"):
+            return P(*([None, pol.batch(shape[1])] + [None] * (leaf.ndim - 2)))
+        if leafname == "pos":             # (B,)
+            return P(pol.batch(shape[0]))
+        if leafname == "enc_mask":        # (B,T)
+            return P(pol.batch(shape[0]), None)
+        # fallback: shard nothing
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, state_shape)
+
+
+def train_state_specs(pol: ShardingPolicy, state_shape) -> Any:
+    """TrainState(params, AdamWState(step, mu, nu)): moments mirror params."""
+    from repro.training.train_loop import TrainState
+    from repro.training.optimizer import AdamWState
+
+    p_spec = param_specs(pol, state_shape.params)
+    return TrainState(
+        params=p_spec,
+        opt=AdamWState(step=P(),
+                       mu=param_specs(pol, state_shape.opt.mu),
+                       nu=param_specs(pol, state_shape.opt.nu)),
+    )
+
+
+def to_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,25 @@
+"""Training substrate: AdamW, LR schedules, losses, train step, checkpoints."""
+
+from repro.training.optimizer import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.training.losses import lm_loss
+from repro.training.train_loop import make_train_step, TrainState
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "lm_loss",
+    "make_train_step",
+    "TrainState",
+    "save_checkpoint",
+    "load_checkpoint",
+]

@@ -1,0 +1,74 @@
+"""Checkpointing: pytree <-> .npz on disk, with structure manifest.
+
+No orbax offline — this is a dependency-free implementation with the
+same guarantees a trainer needs: atomic write (tmp + rename), exact
+dtype/shape restore, and a JSON manifest for inspection.  Leaves are
+flattened with jax.tree_util key paths so arbitrary nested dict/list/
+NamedTuple states (TrainState, AdamWState, decode caches) round-trip.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves_with_paths:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat, treedef
+
+
+def save_checkpoint(path: str, tree, *, step: int | None = None) -> str:
+    """Atomically write ``tree`` to ``path`` (.npz). Returns final path."""
+    flat, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "num_leaves": len(flat),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, __manifest__=json.dumps(manifest), **flat)
+        # np.savez appends .npz to the filename it writes
+        os.replace(tmp + ".npz", path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def load_checkpoint(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (same treedef)."""
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files if k != "__manifest__"}
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_, leaf in leaves_with_paths:
+        key = jax.tree_util.keystr(path_)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def checkpoint_step(path: str) -> int | None:
+    with np.load(path, allow_pickle=False) as z:
+        m = json.loads(str(z["__manifest__"]))
+    return m.get("step")

@@ -1,0 +1,44 @@
+"""Loss functions for the LM stack."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _token_ce(logits, targets, mask=None):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(model, params, batch, *, aux_weight: float = 0.001,
+            mtp_weight: float = 0.3):
+    """Causal-LM cross entropy + MoE load-balance aux + optional MTP loss.
+
+    batch: {"tokens": (B,S), "targets": (B,S)[, "mask", "frames"]}.
+    Returns (loss, metrics dict).
+    """
+    kw = {}
+    if "frames" in batch:
+        kw["frames"] = batch["frames"]
+    out = model.train_logits(params, batch["tokens"], **kw)
+    mask = batch.get("mask")
+    ce = _token_ce(out["logits"], batch["targets"], mask)
+    loss = ce + aux_weight * out["aux_loss"]
+    metrics = {"ce": ce, "aux": out["aux_loss"]}
+    if "mtp_logits" in out:
+        # MTP predicts token t+2: shift targets one extra step
+        mtp_targets = jnp.roll(batch["targets"], -1, axis=1)
+        valid = jnp.ones_like(mtp_targets, jnp.float32).at[:, -2:].set(0.0)
+        if mask is not None:
+            valid = valid * mask
+        mtp_ce = _token_ce(out["mtp_logits"], mtp_targets, valid)
+        loss = loss + mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,97 @@
+"""AdamW + gradient clipping + LR schedules, as pure pytree transforms.
+
+No optax in this environment — the implementation follows the standard
+decoupled-weight-decay AdamW (Loshchilov & Hutter) with bias correction.
+Moments are stored in f32 regardless of param dtype (mixed-precision
+training discipline: bf16 params would otherwise lose the small updates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # scalar int32
+    mu: Any                # first moment  (f32 pytree)
+    nu: Any                # second moment (f32 pytree)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params, moments_dtype=jnp.float32) -> AdamWState:
+    """``moments_dtype=bf16`` halves optimizer memory (ZeRO-style knob used
+    by the >=100B dry-runs; f32 moments remain the training default)."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, moments_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, global_norm)."""
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2  # decay only matrices (norms/bias/scalars exempt)
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """One AdamW step. ``lr`` may be a traced scalar (schedule value)."""
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mdt = m.dtype
+        m = (b1 * m.astype(jnp.float32) + (1 - b1) * gf).astype(mdt)
+        v = (b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf).astype(mdt)
+        update = (m.astype(jnp.float32) / c1) / \
+            (jnp.sqrt(v.astype(jnp.float32) / c2) + cfg.eps)
+        if _is_matrix(p):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    min_frac: float = 0.1):
+    """Linear warmup -> cosine decay to ``min_frac * base_lr``."""
+
+    def lr_at(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return lr_at

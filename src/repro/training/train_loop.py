@@ -1,0 +1,57 @@
+"""Train-step factory: loss -> grads -> clip -> AdamW, one jit-able unit.
+
+``make_train_step`` builds the exact function the multi-pod dry-run
+lowers for the ``train_4k`` shape, so what we roofline is what we train.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.losses import lm_loss
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model, key, moments_dtype=jnp.float32) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params,
+                      opt=adamw_init(params, moments_dtype=moments_dtype))
+
+
+def make_train_step(model, *, lr_schedule: Optional[Callable] = None,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    remat: bool = False) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(model, params, batch)
+
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn, static_argnums=())
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        lr = (lr_schedule(state.opt.step) if lr_schedule is not None
+              else opt_cfg.lr)
+        params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
+                                   cfg=opt_cfg)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step

@@ -1,0 +1,196 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture is instantiated as the REDUCED same-family
+variant (<=2 layers per group kind, d_model<=512, <=4 experts) and runs
+train / prefill / decode steps on CPU, asserting shapes and finiteness.
+The FULL configs are exercised only by the dry-run (launch/dryrun.py).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config, smoke_config
+from repro.models.model import LM
+
+B, S = 2, 16
+
+
+def _inputs(cfg, key, s=S):
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (B, s)).astype(np.int32)
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder.max_frames, cfg.d_model)),
+            jnp.float32)
+    return jnp.asarray(toks), kw
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_forward(arch):
+    cfg = smoke_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks, kw = _inputs(cfg, 0)
+    out = jax.jit(lambda p, t: model.train_logits(p, t, **kw))(params, toks)
+    assert out["logits"].shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(out["logits"]).all()), f"{arch}: NaN in logits"
+    assert bool(jnp.isfinite(out["aux_loss"]))
+    if cfg.mtp_depth:
+        assert out["mtp_logits"].shape == (B, S, cfg.vocab_size)
+        assert bool(jnp.isfinite(out["mtp_logits"]).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step_grads(arch):
+    """One SGD step: grads exist, are finite, and change the loss."""
+    cfg = smoke_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks, kw = _inputs(cfg, 0)
+    targets = jnp.roll(toks, -1, axis=1)
+
+    def loss_fn(p):
+        out = model.train_logits(p, toks, **kw)
+        logits = out["logits"].astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+        return (logz - gold).mean() + 0.01 * out["aux_loss"]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}: NaN grad"
+    # at least some gradient signal
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_prefill_then_decode(arch):
+    cfg = smoke_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks, kw = _inputs(cfg, 0)
+    max_len = S + 4
+
+    logits, state = jax.jit(
+        lambda p, t: model.prefill(p, t, max_len=max_len, **kw)
+    )(params, toks)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(state["pos"][0]) == S
+
+    step = jax.jit(lambda p, st, tk: model.decode_step(p, st, tk))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for _ in range(3):
+        logits, state = step(params, state, tok)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN in decode"
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    assert int(state["pos"][0]) == S + 3
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "zamba2-1.2b", "rwkv6-3b",
+                                  "deepseek-v3-671b"])
+def test_decode_matches_train_forward(arch):
+    """prefill+decode logits == teacher-forced forward logits (same tokens).
+
+    The strongest cache-correctness check: runs the *whole model* both
+    ways. (For archs whose decode path is exactly the full path's math.)
+    """
+    cfg = smoke_config(arch)
+    # rwkv chunk=32 demands seq%32==0 on the full path; use s=32 inputs
+    s = 32
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, s)), jnp.int32)
+
+    out = model.train_logits(params, toks)
+    full_logits = out["logits"]                      # (B,s,V)
+
+    k = 4  # decode the last k tokens incrementally
+    _, state = model.prefill(params, toks[:, : s - k], max_len=s)
+    step = jax.jit(lambda p, st, tk: model.decode_step(p, st, tk))
+    for t in range(s - k, s):
+        logits, state = step(params, state, toks[:, t:t + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, t, :]),
+            rtol=2e-3, atol=2e-3,
+        )
+
+
+def test_assigned_dims_match_assignment():
+    """The FULL configs carry the exact assigned hyper-parameters."""
+    expect = {
+        "rwkv6-3b": dict(num_layers=32, d_model=2560, vocab_size=65536),
+        "whisper-large-v3": dict(num_layers=32, d_model=1280,
+                                 vocab_size=51866, num_heads=20),
+        "moonshot-v1-16b-a3b": dict(num_layers=48, d_model=2048,
+                                    vocab_size=163840),
+        "qwen3-moe-30b-a3b": dict(num_layers=48, d_model=2048,
+                                  vocab_size=151936, num_heads=32,
+                                  num_kv_heads=4),
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, vocab_size=32000),
+        "qwen3-32b": dict(num_layers=64, d_model=5120, vocab_size=151936,
+                          num_heads=64, num_kv_heads=8, d_ff=25600),
+        "deepseek-v3-671b": dict(num_layers=61, d_model=7168,
+                                 vocab_size=129280, num_heads=128),
+        "deepseek-67b": dict(num_layers=95, d_model=8192,
+                             vocab_size=102400, d_ff=22016),
+        "qwen3-8b": dict(num_layers=36, d_model=4096, vocab_size=151936,
+                         d_ff=12288),
+        "chameleon-34b": dict(num_layers=48, d_model=8192, vocab_size=65536,
+                              d_ff=22016),
+    }
+    for arch, exp in expect.items():
+        cfg = get_config(arch)
+        for k, v in exp.items():
+            got = getattr(cfg, k) if k != "num_layers" else cfg.num_layers
+            assert got == v, f"{arch}.{k}: {got} != {v}"
+
+
+def test_moe_expert_counts():
+    assert get_config("qwen3-moe-30b-a3b").moe.num_experts == 128
+    assert get_config("qwen3-moe-30b-a3b").moe.top_k == 8
+    assert get_config("deepseek-v3-671b").moe.num_experts == 256
+    assert get_config("deepseek-v3-671b").moe.top_k == 8
+    assert get_config("deepseek-v3-671b").moe.num_shared_experts == 1
+    assert get_config("moonshot-v1-16b-a3b").moe.num_experts == 64
+    assert get_config("moonshot-v1-16b-a3b").moe.top_k == 6
+
+
+def test_param_counts_sane():
+    """Total param counts are in the advertised ballpark."""
+    cases = {
+        "deepseek-v3-671b": (550e9, 780e9),
+        "deepseek-67b": (55e9, 80e9),
+        "qwen3-32b": (25e9, 40e9),
+        "qwen3-8b": (6e9, 10e9),
+        "qwen3-moe-30b-a3b": (25e9, 36e9),
+        # assignment dims (48L x 64e) give ~28B, larger than the real
+        # 27-layer Moonlight-16B; the assigned numbers are authoritative
+        "moonshot-v1-16b-a3b": (25e9, 32e9),
+        "chameleon-34b": (30e9, 40e9),
+        "rwkv6-3b": (2e9, 4e9),
+        "zamba2-1.2b": (0.9e9, 1.9e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in cases.items():
+        n = get_config(arch).param_counts()["total"]
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+    # MoE active << total
+    ds = get_config("deepseek-v3-671b").param_counts()
+    assert ds["active"] < 0.12 * ds["total"]
+
+
+def test_long_500k_support_flags():
+    from repro.configs import shape_supported
+    ok = {a for a in ARCH_NAMES if shape_supported(a, "long_500k")[0]}
+    assert ok == {"rwkv6-3b", "zamba2-1.2b", "qwen3-8b"}
+    for a in ARCH_NAMES:
+        assert shape_supported(a, "train_4k")[0]

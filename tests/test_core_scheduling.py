@@ -1,0 +1,169 @@
+"""Unit + property tests: latency planes, T_tx tracking, CI decision rule."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel, bytes_for_tokens
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import make_profile
+from repro.core.scheduler import CLOUD, EDGE, CNMTScheduler, StaticScheduler
+from repro.core.tx_estimator import TxEstimator
+
+
+# ---------------------------------------------------------------- latency --
+def test_latency_plane_exact_fit():
+    rng = np.random.default_rng(0)
+    n = rng.uniform(1, 100, 400)
+    m = rng.uniform(1, 100, 400)
+    t = 2e-3 * n + 7e-3 * m + 0.05
+    lm = LinearLatencyModel().fit(n, m, t)
+    assert lm.alpha_n == pytest.approx(2e-3, rel=1e-3)
+    assert lm.alpha_m == pytest.approx(7e-3, rel=1e-3)
+    assert lm.beta == pytest.approx(0.05, rel=1e-2)
+    assert lm.r2(n, m, t) > 0.999
+
+
+def test_scaled_device_is_uniformly_faster():
+    lm = LinearLatencyModel(1e-3, 5e-3, 0.02)
+    fast = lm.scaled(4.0)
+    n, m = np.array([10.0, 50.0]), np.array([12.0, 40.0])
+    assert np.allclose(np.asarray(fast.predict(n, m)),
+                       np.asarray(lm.predict(n, m)) / 4.0, rtol=1e-6)
+
+
+def test_roofline_constructed_plane():
+    lm = LinearLatencyModel.from_roofline(
+        prefill_flops_per_token=2e9,
+        decode_flops_per_token=2e9,
+        decode_bytes_per_token=16e9,   # memory-bound decode
+        peak_flops=197e12, hbm_bw=819e9, mfu=0.5, overhead_s=0.001,
+    )
+    # decode term must be the max(compute, memory) = memory path
+    assert lm.alpha_m == pytest.approx(16e9 / 819e9, rel=1e-6)
+    assert lm.alpha_n == pytest.approx(2e9 / (0.5 * 197e12), rel=1e-6)
+    assert lm.beta == 0.001
+
+
+def test_true_time_noise_bounded_and_positive():
+    dp = DeviceProfile("d", LinearLatencyModel(0, 1e-3, 0.01), noise_frac=0.1)
+    rng = np.random.default_rng(0)
+    t = dp.true_time(np.full(1000, 10.0), np.full(1000, 10.0), rng)
+    base = 0.02
+    assert np.all(t > 0)
+    assert np.all(t <= base * (1 + 0.1 * 3) + 1e-9)
+    assert np.all(t >= base * (1 - 0.1 * 3) - 1e-9)
+
+
+# --------------------------------------------------------------------- tx --
+def test_tx_estimator_ewma_converges():
+    est = TxEstimator(alpha=0.5, init_rtt_s=0.5)
+    for i in range(50):
+        est.observe(float(i), 0.02)
+    assert est.rtt(50.0) == pytest.approx(0.02, rel=1e-3)
+
+
+def test_tx_estimator_last_mode_tracks_instantly():
+    est = TxEstimator(mode="last", init_rtt_s=0.5)
+    est.observe(0.0, 0.1)
+    est.observe(1.0, 0.3)
+    assert est.rtt(2.0) == 0.3
+
+
+def test_tx_estimator_staleness_probe():
+    est = TxEstimator(max_age_s=10.0, init_rtt_s=0.5)
+    probe = lambda t: 0.03
+    r = est.rtt(100.0, probe_fn=probe)
+    assert r == pytest.approx(0.03, rel=0.5)
+    assert est.n_probes == 1
+    # fresh estimate -> no second probe
+    est.rtt(101.0, probe_fn=probe)
+    assert est.n_probes == 1
+
+
+def test_tx_time_includes_bandwidth_term():
+    est = TxEstimator(init_rtt_s=0.010, bandwidth_bps=100e6)
+    # 1 MB payload at 100 Mbps = 80 ms
+    assert est.tx_time(0.0, 1e6) == pytest.approx(0.010 + 0.08, rel=1e-6)
+
+
+def test_bytes_for_tokens_paper_encoding():
+    assert np.asarray(bytes_for_tokens(10)).item() == 20  # 2 bytes/token §II
+
+
+# -------------------------------------------------------------- scheduler --
+def _mk_pair(edge_speed=1.0, cloud_speedup=5.0):
+    edge_lm = LinearLatencyModel(2e-3, 8e-3, 0.01).scaled(edge_speed)
+    cloud_lm = LinearLatencyModel(2e-3, 8e-3, 0.01).scaled(cloud_speedup)
+    return (DeviceProfile("e", edge_lm, 0.0), DeviceProfile("c", cloud_lm, 0.0))
+
+
+def test_decision_rule_eq1_short_edge_long_cloud():
+    """Paper Fig. 2b: short sequences -> Edge Region, long -> Cloud Region."""
+    edge, cloud = _mk_pair()
+    sched = CNMTScheduler(edge=edge, cloud=cloud, n2m=LinearN2M(1.0, 0.0))
+    tx = TxEstimator(init_rtt_s=0.05)
+    short = sched.decide(2, 0.0, tx)
+    long = sched.decide(200, 0.0, tx)
+    assert short.device == EDGE
+    assert long.device == CLOUD
+
+
+def test_decision_flips_with_rtt():
+    """Higher RTT shifts the cloud plane up -> edge region grows (Fig. 2b)."""
+    edge, cloud = _mk_pair()
+    n2m = LinearN2M(1.0, 0.0)
+    sched = CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m)
+    n = 20
+    fast = sched.decide(n, 0.0, TxEstimator(init_rtt_s=0.001))
+    slow = sched.decide(n, 0.0, TxEstimator(init_rtt_s=10.0))
+    assert fast.device == CLOUD
+    assert slow.device == EDGE
+
+
+def test_hedge_margin_prefers_edge_near_breakeven():
+    edge, cloud = _mk_pair()
+    n2m = LinearN2M(1.0, 0.0)
+    base = CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m)
+    hedged = CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m, hedge_margin_s=1e9)
+    tx = TxEstimator(init_rtt_s=0.001)
+    assert base.decide(200, 0.0, tx).device == CLOUD
+    assert hedged.decide(200, 0.0, tx).device == EDGE  # absurd margin -> all edge
+
+
+def test_decide_batch_matches_decide():
+    edge, cloud = _mk_pair()
+    sched = CNMTScheduler(edge=edge, cloud=cloud, n2m=LinearN2M(0.9, 1.0))
+    ns = np.array([2, 10, 50, 120, 200])
+    rtts = np.full(5, 0.05)
+    batch = sched.decide_batch(ns, rtts)
+    for i, n in enumerate(ns):
+        d = sched.decide(int(n), 0.0, TxEstimator(init_rtt_s=0.05))
+        assert batch[i] == d.device
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    rtt=st.floats(1e-4, 1.0),
+    speedup=st.floats(1.5, 20.0),
+)
+def test_property_decision_optimal_under_own_model(n, rtt, speedup):
+    """Eq. (1) is optimal by construction *under the scheduler's model*:
+    the predicted time of the chosen device never exceeds the other's."""
+    edge, cloud = _mk_pair(cloud_speedup=speedup)
+    sched = CNMTScheduler(edge=edge, cloud=cloud, n2m=LinearN2M(1.0, 0.0))
+    d = sched.decide(n, 0.0, TxEstimator(init_rtt_s=rtt))
+    if d.device == EDGE:
+        assert d.t_edge_pred <= d.t_cloud_pred + 1e-12
+    else:
+        assert d.t_cloud_pred < d.t_edge_pred + 1e-12
+
+
+def test_static_schedulers():
+    gw = StaticScheduler(EDGE)
+    sv = StaticScheduler(CLOUD)
+    n = np.arange(5)
+    assert np.all(gw.decide_batch(n, None) == EDGE)
+    assert np.all(sv.decide_batch(n, None) == CLOUD)
+    assert gw.name == "gw" and sv.name == "server"

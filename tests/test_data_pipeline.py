@@ -1,0 +1,113 @@
+"""Data substrate tests: synthetic corpora, tokenizer, batching."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import (
+    TokenBatcher,
+    bucket_by_length,
+    lm_batches,
+    padded_batches,
+)
+from repro.data.synthetic import LANGUAGE_PAIRS, make_corpus
+from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID, HashTokenizer
+
+
+# ------------------------------------------------------------- synthetic --
+def test_corpus_statistics_match_pair():
+    for pair, lp in LANGUAGE_PAIRS.items():
+        c = make_corpus(pair, 20000, seed=0)
+        # verbosity slope recovered from the raw (unfiltered) corpus
+        slope = np.polyfit(c.n, c.m_real, 1)[0]
+        assert abs(slope - lp.gamma) < 0.12, pair
+        assert c.n.min() >= lp.min_len and c.n.max() <= lp.max_len
+
+
+def test_corpus_split_is_disjoint_head_tail():
+    c = make_corpus("de-en", 100, seed=1, with_tokens=True)
+    a, b = c.split(30)
+    assert len(a) == 30 and len(b) == 70
+    assert np.array_equal(np.concatenate([a.n, b.n]), c.n)
+    assert len(a.src) == 30 and len(b.src) == 70
+
+
+def test_corpus_deterministic():
+    a = make_corpus("en-zh", 500, seed=5)
+    b = make_corpus("en-zh", 500, seed=5)
+    assert np.array_equal(a.n, b.n) and np.array_equal(a.m_out, b.m_out)
+
+
+# ------------------------------------------------------------- tokenizer --
+def test_tokenizer_stable_and_bounded():
+    tok = HashTokenizer(1000)
+    ids = tok.encode("the quick brown fox")
+    assert ids == tok.encode("the quick brown fox")
+    assert ids[-1] == EOS_ID
+    assert all(0 <= i < 1000 for i in ids)
+    assert tok.encode("hello", add_bos=True)[0] == BOS_ID
+
+
+def test_tokenizer_decode_stops_at_eos():
+    tok = HashTokenizer(1000)
+    ids = tok.encode("a b") + [77]
+    text = tok.decode(ids)
+    assert "<w77>" not in text          # after EOS
+
+
+# --------------------------------------------------------------- batching --
+def test_bucket_by_length():
+    buckets = bucket_by_length([3, 10, 40, 200], boundaries=(16, 64))
+    assert buckets[0] == [0, 1]
+    assert buckets[1] == [2]
+    assert buckets[2] == [3]
+
+
+def test_padded_batches_shapes_and_masks():
+    c = make_corpus("de-en", 200, seed=2, with_tokens=True)
+    seen = 0
+    for b in padded_batches(c.src, c.tgt, batch_size=16, max_len=64):
+        B, N = b["src"].shape
+        _, M = b["tgt_in"].shape
+        assert b["tgt_out"].shape == (B, M)
+        assert b["src_mask"].shape == (B, N)
+        # BOS-shifted: tgt_in starts with BOS, tgt_out ends with EOS
+        assert (b["tgt_in"][:, 0] == BOS_ID).all()
+        row_lens = (b["tgt_out"] != PAD_ID).sum(1)
+        for i, L in enumerate(row_lens):
+            assert b["tgt_out"][i, L - 1] == EOS_ID
+        seen += B
+    assert seen == 200                  # every pair appears exactly once
+
+
+def test_lm_batches_next_token_alignment():
+    stream = np.arange(1000, dtype=np.int32)
+    for b in lm_batches(stream, batch_size=2, seq_len=8, seed=0):
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_token_batcher_respects_budget():
+    tb = TokenBatcher(max_batch=8, max_tokens_per_batch=64)
+    rng = np.random.default_rng(0)
+    for i in range(20):
+        tb.add(i, rng.integers(1, 100, rng.integers(4, 30)))
+    total = 0
+    while len(tb):
+        ids, batch = tb.next_batch()
+        assert batch.shape[0] == len(ids) <= 8
+        assert batch.size <= 64 or batch.shape[0] == 1
+        total += len(ids)
+    assert total == 20
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes=st.lists(st.integers(1, 50), min_size=1, max_size=30))
+def test_property_batcher_serves_all_exactly_once(sizes):
+    tb = TokenBatcher(max_batch=4, max_tokens_per_batch=128)
+    for i, s in enumerate(sizes):
+        tb.add(i, np.ones(s, np.int32))
+    served = []
+    while len(tb):
+        ids, _ = tb.next_batch()
+        served += ids
+    assert sorted(served) == list(range(len(sizes)))

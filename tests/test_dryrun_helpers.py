@@ -1,0 +1,83 @@
+"""Unit tests for the dry-run analysis machinery (no 512-device init:
+these only exercise the pure-text HLO parsing and the policy rules)."""
+
+import numpy as np
+import pytest
+
+# NOTE: importing repro.launch.dryrun would set XLA_FLAGS for THIS
+# process; these tests import the parsing helpers via a small shim that
+# strips the env side effect first.
+import os
+
+_saved = os.environ.get("XLA_FLAGS")
+from repro.launch import dryrun as dr  # noqa: E402
+if _saved is None:
+    os.environ.pop("XLA_FLAGS", None)
+else:
+    os.environ["XLA_FLAGS"] = _saved
+
+
+HLO = """
+HloModule test
+
+%body_1 (p: (s32[], bf16[8,16])) -> (s32[], bf16[8,16]) {
+  %ag = bf16[8,16]{1,0} all-gather(%x), replica_groups={}
+  ROOT %t = (s32[], bf16[8,16]) tuple(%i, %ag)
+}
+
+%cond_1 (p: (s32[], bf16[8,16])) -> pred[] {
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: bf16[8,16]) -> bf16[8,16] {
+  %ar = f32[4,4]{1,0} all-reduce(%a), to_apply=%sum
+  %w = (s32[], bf16[8,16]) while(%init), condition=%cond_1, body=%body_1
+  ROOT %out = bf16[8,16] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert dr._shape_bytes("bf16[8,16]") == 8 * 16 * 2
+    assert dr._shape_bytes("f32[4,4]") == 64
+    assert dr._shape_bytes("(bf16[2,2], f32[2])") == 8 + 8
+    assert dr._shape_bytes("u32[]") == 4
+
+
+def test_split_computations():
+    comps = dr._split_computations(HLO)
+    assert "body_1" in comps and "cond_1" in comps and "main" in comps
+    assert any("all-gather" in l for l in comps["body_1"])
+
+
+def test_trip_count_from_condition():
+    comps = dr._split_computations(HLO)
+    assert dr._trip_count(comps["cond_1"]) == 12
+
+
+def test_collective_stats_scales_while_bodies():
+    stats = dr.collective_stats(HLO)
+    # all-gather inside the 12-trip while body: 8*16*2 bytes * 12
+    assert stats["all-gather"]["bytes"] == 8 * 16 * 2 * 12
+    assert stats["all-gather"]["count"] == 12
+    # all-reduce in ENTRY counted once
+    assert stats["all-reduce"]["bytes"] == 64
+    assert stats["total_bytes"] == 8 * 16 * 2 * 12 + 64
+
+
+def test_roofline_terms_dominance():
+    rec = {
+        "chips": 256,
+        "analytic": {"flops": 256 * 197e12, "hbm_bytes": 256 * 819e9 * 2},
+        "collectives": {"total_bytes": 50e9},
+        "cost": {"flops": 1.0},
+        "model_flops": 256 * 197e12 * 0.5,
+    }
+    rl = dr.roofline_terms(rec)
+    assert rl["compute_s"] == pytest.approx(1.0)
+    assert rl["memory_s"] == pytest.approx(2.0)
+    assert rl["collective_s"] == pytest.approx(1.0)
+    assert rl["dominant"] == "memory"
+    assert rl["useful_flops_ratio"] == pytest.approx(0.5)

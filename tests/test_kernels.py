@@ -1,0 +1,222 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles.
+
+Per instructions each kernel is swept over shapes/dtypes and
+assert_allclose'd against the ref.py oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey
+
+
+# ------------------------------------------------------- flash attention --
+@pytest.mark.parametrize("b,s,h,hkv,d", [
+    (1, 64, 4, 4, 32),      # MHA
+    (2, 128, 8, 2, 64),     # GQA rep=4
+    (1, 256, 4, 1, 64),     # MQA
+    (2, 96, 4, 2, 32),      # non-multiple S (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, s, h, hkv, d, dtype):
+    ks = jax.random.split(KEY(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([32, 64, 160]),
+    h=st.sampled_from([2, 4]),
+    rep=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 64]),
+)
+def test_flash_attention_property_sweep(s, h, rep, d):
+    hkv = h
+    hq = h * rep
+    ks = jax.random.split(KEY(s * h * d), 3)
+    q = jax.random.normal(ks[0], (1, s, hq, d))
+    k = jax.random.normal(ks[1], (1, s, hkv, d))
+    v = jax.random.normal(ks[2], (1, s, hkv, d))
+    out = ops.flash_attention(q, k, v, block_q=32, block_k=32,
+                              interpret=True)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ----------------------------------------------------------- flash decode --
+@pytest.mark.parametrize("b,s,h,hkv,d", [
+    (2, 128, 4, 4, 32),
+    (3, 256, 8, 2, 64),
+    (1, 512, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_ref(b, s, h, hkv, d, dtype):
+    ks = jax.random.split(KEY(2), 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    lengths = jnp.asarray([s // 4, s // 2, s][:b], jnp.int32)
+    out = ops.flash_decode(q, kc, vc, lengths, block_s=64, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_decode_zero_length_is_masked():
+    """length=1 attends only to slot 0 regardless of cache contents."""
+    b, s, h, d = 1, 64, 2, 32
+    ks = jax.random.split(KEY(3), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    kc = jax.random.normal(ks[1], (b, s, h, d))
+    vc = jax.random.normal(ks[2], (b, s, h, d))
+    out = ops.flash_decode(q, kc, vc, jnp.asarray([1], jnp.int32),
+                           block_s=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vc[:, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ rwkv6 --
+@pytest.mark.parametrize("b,s,h,p,chunk", [
+    (1, 32, 2, 16, 32),     # single chunk
+    (2, 64, 2, 32, 32),     # two chunks (state carry)
+    (1, 128, 4, 64, 32),    # production head dim
+    (2, 96, 1, 16, 32),     # three chunks
+])
+def test_rwkv6_wkv_matches_recurrence(b, s, h, p, chunk):
+    ks = jax.random.split(KEY(4), 5)
+    r = jax.random.normal(ks[0], (b, s, h, p))
+    k = jax.random.normal(ks[1], (b, s, h, p))
+    v = jax.random.normal(ks[2], (b, s, h, p))
+    log_w = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, s, h, p))),
+                      1e-4, 2.5)
+    u = jax.random.normal(ks[4], (h, p)) * 0.5
+    y, s_t = ops.rwkv6_wkv(r, k, v, log_w, u, chunk=chunk, interpret=True)
+    y_ref, s_ref = ref.rwkv6_ref(r, k, v, log_w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_wkv_initial_state():
+    b, s, h, p = 1, 32, 2, 16
+    ks = jax.random.split(KEY(5), 6)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, p)) for i in range(3))
+    log_w = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, s, h, p))),
+                      1e-4, 2.5)
+    u = jax.random.normal(ks[4], (h, p))
+    s0 = jax.random.normal(ks[5], (b, h, p, p))
+    y, s_t = ops.rwkv6_wkv(r, k, v, log_w, u, s0, interpret=True)
+    y_ref, s_ref = ref.rwkv6_ref(r, k, v, log_w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([32, 64]),
+    p=st.sampled_from([16, 32]),
+    seed=st.integers(0, 100),
+)
+def test_rwkv6_property_sweep(s, p, seed):
+    b, h = 1, 2
+    ks = jax.random.split(KEY(seed), 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, p)) for i in range(3))
+    log_w = -jnp.clip(jnp.exp(jax.random.normal(ks[3], (b, s, h, p))),
+                      1e-4, 2.5)
+    u = jax.random.normal(ks[4], (h, p)) * 0.3
+    y, _ = ops.rwkv6_wkv(r, k, v, log_w, u, interpret=True)
+    y_ref, _ = ref.rwkv6_ref(r, k, v, log_w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+# -------------------------------------------------------------------- ssd --
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 64),     # one chunk
+    (2, 128, 2, 32, 16, 64),   # two chunks
+    (1, 256, 4, 64, 64, 64),   # production dims
+    (1, 192, 1, 16, 8, 64),    # three chunks
+])
+def test_ssd_scan_matches_recurrence(b, s, h, p, n, chunk):
+    ks = jax.random.split(KEY(6), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, h))
+    b_in = jax.random.normal(ks[2], (b, s, h, n))
+    c_in = jax.random.normal(ks[3], (b, s, h, n))
+    y, s_t = ops.ssd_scan(x, dt, a_log, b_in, c_in, chunk=chunk,
+                          interpret=True)
+    y_ref, s_ref = ref.ssd_ref(x, dt, a_log, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_scan_initial_state():
+    b, s, h, p, n = 1, 64, 2, 16, 8
+    ks = jax.random.split(KEY(7), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.zeros((h,))
+    b_in = jax.random.normal(ks[2], (b, s, h, n))
+    c_in = jax.random.normal(ks[3], (b, s, h, n))
+    s0 = jax.random.normal(ks[4], (b, h, p, n))
+    y, s_t = ops.ssd_scan(x, dt, a_log, b_in, c_in, s0, interpret=True)
+    y_ref, s_ref = ref.ssd_ref(x, dt, a_log, b_in, c_in, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s_t), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([64, 128]),
+    n=st.sampled_from([8, 32]),
+    seed=st.integers(0, 100),
+)
+def test_ssd_property_sweep(s, n, seed):
+    b, h, p = 1, 2, 16
+    ks = jax.random.split(KEY(seed + 1000), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(0.5, 4.0, h))
+    b_in = jax.random.normal(ks[2], (b, s, h, n))
+    c_in = jax.random.normal(ks[3], (b, s, h, n))
+    y, _ = ops.ssd_scan(x, dt, a_log, b_in, c_in, chunk=64, interpret=True)
+    y_ref, _ = ref.ssd_ref(x, dt, a_log, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=5e-4, atol=5e-4)

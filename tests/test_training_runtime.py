@@ -1,0 +1,168 @@
+"""Training substrate + serving runtime tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import LinearN2M
+from repro.core.scheduler import CLOUD, EDGE
+from repro.models.model import LM
+from repro.runtime.engine import CollaborativeEngine, Tier
+from repro.runtime.serving import GenerationSession
+from repro.training.checkpoint import (
+    checkpoint_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+# --------------------------------------------------------------- optimizer
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array(2.0)}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(params, g, opt, lr=0.1, cfg=cfg)
+    assert float(loss(params)) < 1e-3
+    assert int(opt.step) == 200
+
+
+def test_weight_decay_only_on_matrices():
+    params = {"w": jnp.ones((2, 2)), "g": jnp.ones((2,))}
+    opt = adamw_init(params)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5)
+    p2, _ = adamw_update(params, zero_g, opt, lr=0.1, cfg=cfg)
+    assert float(jnp.abs(p2["w"] - 1.0).max()) > 1e-3   # decayed
+    assert float(jnp.abs(p2["g"] - 1.0).max()) < 1e-6   # exempt
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+    norm2 = float(jnp.linalg.norm(clipped["a"]))
+    assert norm2 == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.array(0))) == 0.0
+    assert float(sched(jnp.array(10))) == pytest.approx(1e-3, rel=1e-5)
+    assert float(sched(jnp.array(100))) == pytest.approx(1e-4, rel=1e-3)
+    assert float(sched(jnp.array(55))) < 1e-3
+
+
+# -------------------------------------------------------------- train loop
+@pytest.mark.parametrize("arch", ["qwen3-8b", "qwen3-moe-30b-a3b",
+                                  "rwkv6-3b", "deepseek-v3-671b"])
+def test_train_step_reduces_loss(arch):
+    cfg = smoke_config(arch)
+    model = LM(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (2, 16)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks),
+             "targets": jnp.asarray(np.roll(toks, -1, 1))}
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+# -------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = smoke_config("zamba2-1.2b")
+    model = LM(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, state, step=7)
+    like = init_train_state(model, jax.random.PRNGKey(1))  # different values
+    restored = load_checkpoint(path, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert checkpoint_step(path) == 7
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, {"w": jnp.ones((2, 2))})
+    with pytest.raises((ValueError, KeyError)):
+        load_checkpoint(path, {"w": jnp.ones((3, 3))})
+
+
+# ----------------------------------------------------------------- serving
+def test_generation_session_runs():
+    cfg = smoke_config("qwen3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sess = GenerationSession(model, params, max_len=32)
+    toks = np.random.default_rng(0).integers(4, cfg.vocab_size, (2, 8))
+    out = sess.generate(toks.astype(np.int32), max_new=6)
+    assert out.shape[0] == 2 and 1 <= out.shape[1] <= 6
+    assert out.dtype in (np.int32, np.int64)
+
+
+# ------------------------------------------------------------------ engine
+def _engine(rtt=0.05, speedup=5.0):
+    edge = Tier(DeviceProfile("edge", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.0))
+    cloud = Tier(DeviceProfile(
+        "cloud", LinearLatencyModel(2e-3 / speedup, 8e-3 / speedup,
+                                    0.01 / speedup), 0.0))
+    return CollaborativeEngine(edge=edge, cloud=cloud,
+                               n2m=LinearN2M(1.0, 0.0),
+                               rtt_fn=lambda t: rtt, seed=0)
+
+
+def test_engine_routes_short_edge_long_cloud():
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    short = eng.submit(rng.integers(4, 100, (3,)), now_s=0.0)
+    long = eng.submit(rng.integers(4, 100, (250,)), now_s=1.0)
+    assert short.device == EDGE
+    assert long.device == CLOUD
+    # offloaded request refreshed the tx estimate
+    assert eng.tx.n_samples >= 1
+    s = eng.stats()
+    assert s["requests"] == 2
+    assert 0.0 < s["offload_frac"] < 1.0
+
+
+def test_engine_with_real_edge_executor():
+    """Mixed setup: real executor at the edge, modelled cloud."""
+    calls = []
+
+    def fake_translate(tokens):
+        calls.append(len(tokens))
+        return max(1, len(tokens) - 1), np.arange(max(1, len(tokens) - 1))
+
+    edge = Tier(DeviceProfile("edge", LinearLatencyModel(1e-4, 1e-4, 1e-4), 0.0),
+                executor=fake_translate)
+    cloud = Tier(DeviceProfile("cloud", LinearLatencyModel(1e-5, 1e-5, 1e-5), 0.0))
+    eng = CollaborativeEngine(edge=edge, cloud=cloud, n2m=LinearN2M(1.0, 0.0),
+                              rtt_fn=lambda t: 10.0, seed=0)  # huge RTT
+    r = eng.submit(np.arange(5), now_s=0.0)
+    assert r.device == EDGE          # RTT makes cloud hopeless
+    assert calls == [5]
+    assert r.m_out == 4

@@ -6,6 +6,7 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
   fig3       — N->M regression quality per language pair
   predictors — beyond-paper estimator ablation (paper's future work)
   tiered     — beyond-paper: roofline-priced TPU tiers under C-NMT
+  multitier  — beyond-paper: 3-tier queue-aware DES under Poisson load
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -43,6 +44,10 @@ def main() -> None:
 
     from benchmarks import tiered
     _, csv = tiered.run(n_requests=min(n_req, 50_000))
+    csv_all += csv
+
+    from benchmarks import multitier
+    _, csv = multitier.run(n_requests=min(n_req, 20_000))
     csv_all += csv
 
     from benchmarks import roofline

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command ROADMAP.md specifies, so local
+# runs and CI invoke the suite identically.  Extra args pass through to
+# pytest (e.g. `scripts/tier1.sh -m "not slow"`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

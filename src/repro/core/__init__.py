@@ -21,16 +21,29 @@ from repro.core.length_regressor import (
 )
 from repro.core.latency_model import LinearLatencyModel, DeviceProfile
 from repro.core.tx_estimator import TxEstimator
+from repro.core.calibration import OnlineCalibrator
 from repro.core.scheduler import (
     CNMTScheduler,
+    MultiTierScheduler,
+    MultiTierDecision,
     NaiveScheduler,
     OracleScheduler,
+    SchedTier,
     StaticScheduler,
     EDGE,
     CLOUD,
 )
 from repro.core.profiles import ConnectionProfile, make_profile
-from repro.core.simulator import SimulationResult, simulate, table1_row
+from repro.core.simulator import (
+    DESResult,
+    SimTier,
+    SimulationResult,
+    make_poisson_stream,
+    make_stream,
+    simulate,
+    simulate_des,
+    table1_row,
+)
 
 __all__ = [
     "LinearN2M",
@@ -42,15 +55,24 @@ __all__ = [
     "LinearLatencyModel",
     "DeviceProfile",
     "TxEstimator",
+    "OnlineCalibrator",
     "CNMTScheduler",
+    "MultiTierScheduler",
+    "MultiTierDecision",
     "NaiveScheduler",
     "OracleScheduler",
+    "SchedTier",
     "StaticScheduler",
     "EDGE",
     "CLOUD",
     "ConnectionProfile",
     "make_profile",
+    "DESResult",
+    "SimTier",
     "SimulationResult",
+    "make_poisson_stream",
+    "make_stream",
     "simulate",
+    "simulate_des",
     "table1_row",
 ]

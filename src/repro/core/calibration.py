@@ -17,12 +17,18 @@ out from the 100k evaluation set.  Here:
 * :func:`device_from_roofline` prices an un-runnable target (a TPU v5e
   mesh) from dry-run cost analysis — beyond paper; used by the tiered
   serving engine.
+* :class:`OnlineCalibrator` closes the loop at serve time (beyond paper):
+  it accumulates observed (N, M_out, T_exe) completions per tier and
+  periodically refits both the scheduler's per-tier planes and the
+  LinearN2M length regressor, so a drifting device (thermal throttling,
+  noisy neighbors) or a mis-fit offline plane self-corrects online.
 """
 
 from __future__ import annotations
 
+import collections
 import time
-from typing import Callable, Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -124,6 +130,67 @@ def make_edge_cloud_pair(
     edge = DeviceProfile("edge-gw", base.scaled(1.0 / edge_scale), edge_noise)
     cloud = DeviceProfile("cloud-server", base.scaled(speedup / edge_scale), cloud_noise)
     return edge, cloud
+
+
+class OnlineCalibrator:
+    """Online feedback refitting for the multi-tier scheduler.
+
+    ``record`` ingests one completed request's observation; every
+    ``interval`` records it reports a refit as due, and ``refit``
+    re-estimates (in place):
+
+    * each tier's T_exe plane from its last ``window`` (N, M, T) samples
+      (skipped below ``min_samples`` — a tier that never wins keeps its
+      offline plane), with per-token slopes clamped non-negative exactly
+      like the offline fit; and
+    * the shared LinearN2M gamma/delta from the pooled (N, M_out) pairs.
+
+    The caller owns which model objects get mutated — pass copies if the
+    originals double as ground truth (the DES does exactly that).
+    """
+
+    def __init__(self, n_tiers: int, *, interval: int = 256,
+                 min_samples: int = 16, window: int = 4096):
+        if interval < 1:
+            raise ValueError("interval must be >= 1")
+        self.interval = interval
+        self.min_samples = max(int(min_samples), 3)
+        self._samples = [collections.deque(maxlen=window)
+                         for _ in range(n_tiers)]
+        self._since_refit = 0
+        self.n_recorded = 0
+        self.n_refits = 0
+
+    def record(self, tier: int, n: float, m_out: float, t_exe_s: float) -> bool:
+        """Ingest one completion; True when a refit is due."""
+        self._samples[tier].append((float(n), float(m_out), float(t_exe_s)))
+        self.n_recorded += 1
+        self._since_refit += 1
+        return self._since_refit >= self.interval
+
+    def refit(self, models: Sequence[LinearLatencyModel],
+              n2m=None) -> Dict[str, float]:
+        """Refit tier planes (and optionally the N->M regressor) in place."""
+        self._since_refit = 0
+        refit_tiers = 0
+        for k, model in enumerate(models):
+            samples = self._samples[k]
+            if len(samples) < self.min_samples:
+                continue
+            n, m, t = (np.asarray(col) for col in zip(*samples))
+            model.fit(n, m, t)
+            model.alpha_n = max(model.alpha_n, 0.0)
+            model.alpha_m = max(model.alpha_m, 0.0)
+            refit_tiers += 1
+        pooled = [s for tier in self._samples for s in tier]
+        if n2m is not None and len(pooled) >= 2:
+            n, m, _ = (np.asarray(col) for col in zip(*pooled))
+            if np.ptp(n) > 0:          # degenerate single-N pools: keep fit
+                n2m.fit(n, m)
+        self.n_refits += 1
+        return {"refit_tiers": float(refit_tiers),
+                "pooled_samples": float(len(pooled)),
+                "n_refits": float(self.n_refits)}
 
 
 def device_from_roofline(

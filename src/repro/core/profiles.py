@@ -19,6 +19,7 @@ the property the paper obtained by replaying recorded traces.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -99,7 +100,10 @@ def make_profile(name: str, *, seed: int = 0, duration_s: float = 4 * 3600.0,
     spikes to several hundred ms.
     CP2 (morning, 7:30-12:30 am): clean — mean RTT ~35 ms, rare mild spikes.
     """
-    rng = np.random.default_rng(np.uint32(abs(hash((name, seed))) % (2**32)))
+    # crc32, not hash(): Python string hashing is salted per process, which
+    # silently broke the "deterministic given the seed" contract across runs
+    rng = np.random.default_rng(
+        np.uint32(zlib.crc32(f"{name}:{seed}".encode()) % (2**32)))
     if name.lower() in ("cp1", "profile1"):
         rtt = _ou_trace(
             rng, duration_s=duration_s, dt_s=dt_s,

@@ -23,12 +23,23 @@ Beyond paper
   the break-even point, prefer the tier with lower variance (the edge —
   no network) — a cheap uncertainty-aware refinement of Eq. (1).
 * batched vectorized ``decide_batch`` used by the analytic simulator.
+* :class:`MultiTierScheduler` — the N-tier generalization used by the
+  queue-aware serving engine and the discrete-event simulator:
+
+      d_tgt = argmin_k [ T_queue,k + T_tx,k + T_exe,k(N, M_hat) ]
+
+  Each :class:`SchedTier` carries its own latency plane and (for remote
+  tiers) its own :class:`TxEstimator`; ``T_queue`` comes from the
+  caller's occupancy bookkeeping.  With exactly two tiers (local edge +
+  remote cloud) and empty queues this reduces *bit-for-bit* to
+  :meth:`CNMTScheduler.decide` — the paper's Eq. (1) is the N=2 special
+  case, and the regression tests pin that equivalence.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -109,6 +120,156 @@ def NaiveScheduler(edge: DeviceProfile, cloud: DeviceProfile, n_corpus, m_corpus
 
 
 @dataclasses.dataclass
+class SchedTier:
+    """What the scheduler *believes* about one tier.
+
+    ``model`` is the T_exe,k(N, M) plane (measured, roofline-priced, or
+    online-refit); ``tx`` is the tier's link estimator — ``None`` marks a
+    local tier (no network hop, no T_tx term, lowest variance).
+    """
+
+    name: str
+    model: LinearLatencyModel
+    tx: Optional[TxEstimator] = None
+
+    @property
+    def is_local(self) -> bool:
+        return self.tx is None
+
+
+@dataclasses.dataclass
+class MultiTierDecision:
+    tier: int                  # index into the scheduler's tier list
+    t_pred: Tuple[float, ...]  # per-tier predicted T_queue + T_tx + T_exe
+    m_hat: float
+
+
+class MultiTierScheduler(BaseScheduler):
+    """N-tier generalization of Eq. (1):
+
+        d_tgt = argmin_k [ T_queue,k + T_tx,k + T_exe,k(N, M_hat) ]
+
+    ``hedge_margin_s`` generalizes the 2-tier hedge: among tiers whose
+    predicted total is within the margin of the minimum, prefer the
+    fastest *local* tier (no network variance).  With tiers
+    ``[edge(local), cloud(remote)]`` and zero queue delays this picks the
+    same device as :meth:`CNMTScheduler.decide` bit-for-bit (same jnp
+    prediction path, same float op order).
+    """
+
+    def __init__(self, tiers: Sequence[SchedTier], n2m: LinearN2M, *,
+                 bytes_per_token: int = 2, hedge_margin_s: float = 0.0,
+                 name: str = "c-nmt-ntier"):
+        if not tiers:
+            raise ValueError("need at least one tier")
+        self.tiers = list(tiers)
+        self.n2m = n2m
+        self.bytes_per_token = bytes_per_token
+        self.hedge_margin_s = hedge_margin_s
+        self.name = name
+
+    # ------------------------------------------------------------ helpers --
+    def _select(self, totals: Sequence[float]) -> int:
+        """argmin with the local-preference hedge (see class docstring)."""
+        best = 0
+        for k in range(1, len(totals)):
+            if totals[k] < totals[best]:
+                best = k
+        best_local = None
+        for k in range(len(totals)):
+            if self.tiers[k].is_local and (
+                    best_local is None or totals[k] < totals[best_local]):
+                best_local = k
+        if best_local is not None and (
+                totals[best_local] <= totals[best] + self.hedge_margin_s):
+            return best_local
+        return best
+
+    def m_hat(self, n: float) -> float:
+        return max(float(np.asarray(self.n2m.predict(float(n)))), 1.0)
+
+    # ----------------------------------------------------------- decisions --
+    def decide(self, n: int, now_s: float,
+               queue_delay_s: Optional[Sequence[float]] = None
+               ) -> MultiTierDecision:
+        """Single-request rule; ``queue_delay_s`` is the caller's per-tier
+        T_queue estimate (0.0 for every tier when omitted)."""
+        m_hat = self.m_hat(n)
+        payload = float(bytes_for_tokens(n + m_hat, self.bytes_per_token))
+        totals: List[float] = []
+        for k, tier in enumerate(self.tiers):
+            t_exe = float(np.asarray(tier.model.predict(float(n), m_hat)))
+            t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
+            q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
+            totals.append(t_exe + t_tx + q)
+        return MultiTierDecision(self._select(totals), tuple(totals), m_hat)
+
+    def decide_fast(self, n: float, m_hat: float, now_s: float,
+                    queue_delay_s: Optional[Sequence[float]] = None
+                    ) -> MultiTierDecision:
+        """float64 closed-form fast path (no jnp dispatch) for the
+        discrete-event simulator — the same coefficient arithmetic as
+        ``simulator._simulate_online``, so the empty-queue DES replay
+        matches the analytic replay exactly."""
+        payload = (n + m_hat) * self.bytes_per_token
+        totals: List[float] = []
+        for k, tier in enumerate(self.tiers):
+            m = tier.model
+            t_exe = m.alpha_n * n + m.alpha_m * m_hat + m.beta
+            t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
+            q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
+            totals.append(t_exe + t_tx + q)
+        return MultiTierDecision(self._select(totals), tuple(totals), m_hat)
+
+    def decide_batch(self, n: np.ndarray, rtt: np.ndarray) -> np.ndarray:
+        """Vectorized empty-queue rule (analytic-simulator counterpart of
+        :meth:`CNMTScheduler.decide_batch`): ``rtt`` is the per-request
+        RTT estimate applied to every remote tier's link."""
+        n = np.asarray(n, np.float64)
+        m_hat = np.maximum(np.asarray(self.n2m.predict(n), np.float64), 1.0)
+        payload = bytes_for_tokens(n + m_hat, self.bytes_per_token)
+        totals = []
+        for tier in self.tiers:
+            t = np.asarray(tier.model.predict(n, m_hat), np.float64)
+            if tier.tx is not None:
+                t = t + (np.asarray(rtt, np.float64)
+                         + payload * 8.0 / tier.tx.bandwidth_bps)
+            totals.append(t)
+        stack = np.stack(totals, axis=0)              # (K, R)
+        tmin = stack.min(axis=0)
+        pick = stack.argmin(axis=0)
+        local_idx = [k for k, t in enumerate(self.tiers) if t.is_local]
+        if local_idx:
+            loc = stack[local_idx]                    # (L, R)
+            lbest = loc.argmin(axis=0)
+            use_local = loc.min(axis=0) <= tmin + self.hedge_margin_s
+            pick = np.where(use_local, np.asarray(local_idx)[lbest], pick)
+        return pick.astype(np.int32)
+
+    # ------------------------------------------------------------ feedback --
+    def observe_rtt(self, tier: int, now_s: float, rtt_s: float) -> None:
+        """Feed a timestamped RTT sample from an offloaded completion into
+        the tier's link estimator (§II-C, per link)."""
+        tx = self.tiers[tier].tx
+        if tx is not None:
+            tx.observe(now_s, rtt_s)
+
+    @classmethod
+    def from_pair(cls, edge: DeviceProfile, cloud: DeviceProfile,
+                  n2m: LinearN2M, tx: TxEstimator, *,
+                  bytes_per_token: int = 2, hedge_margin_s: float = 0.0
+                  ) -> "MultiTierScheduler":
+        """The paper-faithful N=2 configuration: local edge + remote cloud
+        sharing the caller's TxEstimator (regression-tested against
+        :class:`CNMTScheduler`)."""
+        return cls(
+            [SchedTier(edge.name, edge.model, None),
+             SchedTier(cloud.name, cloud.model, tx)],
+            n2m, bytes_per_token=bytes_per_token,
+            hedge_margin_s=hedge_margin_s)
+
+
+@dataclasses.dataclass
 class OracleScheduler(BaseScheduler):
     """Ideal lower bound (paper §III): picks the truly fastest device.
 
@@ -120,6 +281,12 @@ class OracleScheduler(BaseScheduler):
 
     def decide_batch(self, t_edge_true: np.ndarray, t_cloud_true_with_tx: np.ndarray) -> np.ndarray:
         return np.where(t_edge_true <= t_cloud_true_with_tx, EDGE, CLOUD).astype(np.int32)
+
+    @staticmethod
+    def decide_batch_multi(t_true_totals: np.ndarray) -> np.ndarray:
+        """N-tier oracle: ``t_true_totals`` is (K, R) true per-tier latency
+        (execution + tx) per request; picks the per-request argmin."""
+        return np.argmin(np.asarray(t_true_totals), axis=0).astype(np.int32)
 
 
 @dataclasses.dataclass

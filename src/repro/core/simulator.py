@@ -1,7 +1,8 @@
-"""The paper's experiment (§III): a stream of translation requests hits the
-edge gateway, which decides per request whether to run locally or offload.
+"""Request-stream simulators: the paper's analytic replay (§III) and a
+queue-aware discrete-event extension for N-tier serving.
 
-Faithful points:
+Analytic replay (paper-faithful, :func:`simulate`)
+--------------------------------------------------
 * 100k requests replayed against a time-varying RTT trace (Fig. 4) with
   constant symmetric 100 Mbps bandwidth;
 * T_exe planes fitted on held-out characterization samples (10k/device);
@@ -11,24 +12,43 @@ Faithful points:
   output length; GW/Server are the static baselines;
 * requests are independent (no queueing), as in the paper.
 
-The simulator is sequential for estimate-based policies (the T_tx estimate
-evolves with past offloading decisions — this coupling is the interesting
-dynamics) and vectorized for static/oracle baselines.
+Sequential for estimate-based policies (the T_tx estimate evolves with
+past offloading decisions — this coupling is the interesting dynamics)
+and vectorized for static/oracle baselines.
+
+Discrete-event loop (beyond paper, :func:`simulate_des`)
+--------------------------------------------------------
+The paper's replay treats every request as independent; under real
+traffic tiers saturate.  ``simulate_des`` runs an event-driven loop —
+arrival / start / finish events over N :class:`SimTier`\\ s, each a
+bounded-FIFO multi-server station with its own ground-truth latency
+plane and (for remote tiers) its own RTT trace — driven by a
+:class:`MultiTierScheduler` whose queue term comes from per-tier
+predicted-backlog bookkeeping.  Poisson arrivals (:func:`make_poisson_stream`)
+turn the Fig. 4 experiment into a load sweep; an optional
+:class:`OnlineCalibrator` refits planes and the N->M regressor from
+observed completions every K requests.  At zero load (every completion
+before the next arrival, empty queues) the DES reproduces the analytic
+replay decision-for-decision on the same seed — the invariant tests pin
+it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import heapq
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.calibration import OnlineCalibrator
 from repro.core.latency_model import DeviceProfile, bytes_for_tokens
 from repro.core.profiles import ConnectionProfile
 from repro.core.scheduler import (
     CLOUD,
     EDGE,
     CNMTScheduler,
+    MultiTierScheduler,
     OracleScheduler,
     StaticScheduler,
 )
@@ -62,6 +82,22 @@ def make_stream(n, m_out, m_real, *, duration_s: float, seed: int = 0) -> Reques
     jitter = rng.uniform(0, duration_s / k, size=k)
     return RequestStream(
         t_arrival_s=base + jitter,
+        n=np.asarray(n, np.float64),
+        m_out=np.asarray(m_out, np.float64),
+        m_real=np.asarray(m_real, np.float64),
+    )
+
+
+def make_poisson_stream(n, m_out, m_real, *, rate_hz: float,
+                        seed: int = 0) -> RequestStream:
+    """Poisson arrivals at ``rate_hz`` (exponential inter-arrival gaps) —
+    the load-sweep counterpart of :func:`make_stream`."""
+    if rate_hz <= 0:
+        raise ValueError("rate_hz must be positive")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=len(n))
+    return RequestStream(
+        t_arrival_s=np.cumsum(gaps),
         n=np.asarray(n, np.float64),
         m_out=np.asarray(m_out, np.float64),
         m_real=np.asarray(m_real, np.float64),
@@ -222,3 +258,231 @@ def table1_row(
         "profile": profile.name,
     }
     return res
+
+
+# ===================================================================== DES --
+_ARRIVAL, _FINISH = 0, 1
+
+
+@dataclasses.dataclass
+class SimTier:
+    """Ground truth for one tier in the discrete-event simulator.
+
+    A bounded-FIFO multi-server station: ``servers`` concurrent requests
+    execute, up to ``queue_capacity`` more wait (None = unbounded), and a
+    request routed to a full tier is re-routed to the next-best tier with
+    space (counted in ``DESResult.overflow``).  ``link`` is the tier's
+    RTT trace; None marks the local tier (no T_tx, and no §II-C samples).
+    """
+
+    name: str
+    profile: DeviceProfile
+    servers: int = 1
+    queue_capacity: Optional[int] = None
+    link: Optional[ConnectionProfile] = None
+
+    def __post_init__(self):
+        if self.servers < 1:
+            raise ValueError("servers must be >= 1")
+
+
+@dataclasses.dataclass
+class DESResult:
+    policy: str
+    tier_names: List[str]
+    tier: np.ndarray          # per-request tier index
+    t_arrival_s: np.ndarray
+    t_start_s: np.ndarray     # execution start (arrival + queue wait)
+    t_finish_s: np.ndarray    # execution end
+    wait_s: np.ndarray        # T_queue actually experienced
+    tx_s: np.ndarray          # true T_tx (0 for local tiers)
+    exec_s: np.ndarray        # true T_exe
+    latency_s: np.ndarray     # wait + exec + tx
+    overflow: np.ndarray      # per-tier count of forced enqueues (all full)
+    events: Optional[List] = None   # (time, kind, req, tier) as processed
+
+    @property
+    def total_s(self) -> float:
+        return float(self.latency_s.sum())
+
+    def tier_frac(self) -> Dict[str, float]:
+        r = max(len(self.tier), 1)
+        return {name: float(np.sum(self.tier == k)) / r
+                for k, name in enumerate(self.tier_names)}
+
+    def p95_latency_s(self) -> float:
+        return float(np.percentile(self.latency_s, 95))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": float(len(self.tier)),
+            "mean_latency_s": float(self.latency_s.mean()),
+            "p50_latency_s": float(np.percentile(self.latency_s, 50)),
+            "p95_latency_s": self.p95_latency_s(),
+            "mean_wait_s": float(self.wait_s.mean()),
+            "max_wait_s": float(self.wait_s.max()),
+            "overflow": float(self.overflow.sum()),
+        }
+
+
+def simulate_des(
+    scheduler: MultiTierScheduler,
+    stream: RequestStream,
+    tiers: Sequence[SimTier],
+    *,
+    seed: int = 0,
+    bytes_per_token: Optional[int] = None,
+    calibrator: Optional[OnlineCalibrator] = None,
+    collect_events: bool = False,
+) -> DESResult:
+    """Event-driven replay of ``stream`` over N queued tiers.
+
+    Ground truth mirrors :func:`simulate`: per-tier execution times are
+    drawn vectorized with ``default_rng(seed + 1 + k)`` (tier 0 = edge,
+    tier 1 = cloud reproduces ``_true_times`` exactly) and true T_tx
+    comes from each tier's own trace at the request's arrival time.
+
+    The scheduler sees queues only through its predicted-backlog term
+    (sum of its own T_exe predictions for queued+running requests,
+    divided by the server count) and sees each link only through §II-C
+    timestamped samples that become available when an offloaded request
+    *completes*.  ``calibrator`` (optional) receives every completion and
+    refits the scheduler's planes + N->M regressor whenever its interval
+    elapses — pass scheduler-owned model copies, not the ground-truth
+    profiles.
+    """
+    k_tiers = len(tiers)
+    if k_tiers != len(scheduler.tiers):
+        raise ValueError("scheduler/tier count mismatch")
+    n_req = len(stream)
+    bpt = scheduler.bytes_per_token if bytes_per_token is None \
+        else bytes_per_token
+
+    # ground truth, drawn exactly like the analytic replay
+    true_exec = [t.profile.true_time(stream.n, stream.m_out,
+                                     np.random.default_rng(seed + 1 + k))
+                 for k, t in enumerate(tiers)]
+    payload_true = bytes_for_tokens(stream.n + stream.m_out, bpt)
+    true_tx = [np.zeros(n_req) if t.link is None
+               else t.link.tx_time(stream.t_arrival_s, payload_true)
+               for t in tiers]
+
+    def m_hats_vec():
+        return np.maximum(
+            np.asarray(scheduler.n2m.predict(stream.n), np.float64), 1.0)
+
+    m_hats = m_hats_vec()
+
+    # per-tier station state
+    busy = [0] * k_tiers
+    queues: List[List[int]] = [[] for _ in range(k_tiers)]
+    qhead = [0] * k_tiers                 # pop index (amortized O(1) FIFO)
+    pred_backlog = np.zeros(k_tiers)      # scheduler-predicted work in system
+    pred_exec = np.zeros(n_req)           # predicted T_exe at the chosen tier
+
+    tier_of = np.full(n_req, -1, np.int32)
+    t_start = np.zeros(n_req)
+    t_finish = np.zeros(n_req)
+    overflow = np.zeros(k_tiers, np.int64)
+    events: Optional[List] = [] if collect_events else None
+
+    heap = [(float(stream.t_arrival_s[i]), i, _ARRIVAL, -1)
+            for i in range(n_req)]
+    heapq.heapify(heap)
+    seq = n_req  # tie-break counter for events pushed during the run
+
+    def start(i: int, k: int, now: float) -> None:
+        nonlocal seq
+        busy[k] += 1
+        t_start[i] = now
+        fin = now + float(true_exec[k][i])
+        heapq.heappush(heap, (fin, seq, _FINISH, k))
+        seq += 1
+        finish_req[(fin, seq - 1)] = i
+
+    finish_req: Dict = {}
+
+    def waiting(k: int) -> int:
+        return len(queues[k]) - qhead[k]
+
+    def has_space(k: int) -> bool:
+        cap = tiers[k].queue_capacity
+        return cap is None or waiting(k) < cap or busy[k] < tiers[k].servers
+
+    while heap:
+        now, sq, kind, k_fin = heapq.heappop(heap)
+        if kind == _ARRIVAL:
+            i = sq
+            qd = [float(pred_backlog[k]) / tiers[k].servers
+                  for k in range(k_tiers)]
+            d = scheduler.decide_fast(float(stream.n[i]), float(m_hats[i]),
+                                      now, qd)
+            k = d.tier
+            if not has_space(k):
+                ranked = sorted(range(k_tiers), key=lambda j: d.t_pred[j])
+                for j in ranked:
+                    if has_space(j):
+                        k = j
+                        break
+                else:
+                    overflow[k] += 1      # everything full: force-enqueue
+            tier_of[i] = k
+            pe = (scheduler.tiers[k].model.alpha_n * float(stream.n[i])
+                  + scheduler.tiers[k].model.alpha_m * float(m_hats[i])
+                  + scheduler.tiers[k].model.beta)
+            pred_exec[i] = max(pe, 0.0)
+            pred_backlog[k] += pred_exec[i]
+            if events is not None:
+                events.append((now, "arrival", i, k))
+            if busy[k] < tiers[k].servers:
+                start(i, k, now)
+            else:
+                queues[k].append(i)
+        else:
+            i = finish_req.pop((now, sq))
+            k = k_fin
+            busy[k] -= 1
+            t_finish[i] = now
+            pred_backlog[k] = max(pred_backlog[k] - pred_exec[i], 0.0)
+            if events is not None:
+                events.append((now, "finish", i, k))
+            arr = float(stream.t_arrival_s[i])
+            if tiers[k].link is not None:
+                # §II-C: the response carries timestamps -> RTT sample for
+                # this tier's link, available only now that it completed.
+                scheduler.observe_rtt(k, arr, float(tiers[k].link.rtt_at(arr)))
+            if calibrator is not None:
+                due = calibrator.record(k, float(stream.n[i]),
+                                        float(stream.m_out[i]),
+                                        float(true_exec[k][i]))
+                if due:
+                    calibrator.refit([t.model for t in scheduler.tiers],
+                                     scheduler.n2m)
+                    m_hats = m_hats_vec()
+            if waiting(k) > 0:
+                j = queues[k][qhead[k]]
+                qhead[k] += 1
+                if qhead[k] > 1024 and qhead[k] * 2 > len(queues[k]):
+                    queues[k] = queues[k][qhead[k]:]
+                    qhead[k] = 0
+                start(j, k, now)
+
+    wait = t_start - stream.t_arrival_s
+    rows = np.arange(n_req)
+    exec_s = np.stack(true_exec)[tier_of, rows]
+    tx_s = np.stack(true_tx)[tier_of, rows]
+    latency = wait + exec_s + tx_s
+    return DESResult(
+        policy=scheduler.name,
+        tier_names=[t.name for t in tiers],
+        tier=tier_of,
+        t_arrival_s=np.asarray(stream.t_arrival_s, np.float64),
+        t_start_s=t_start,
+        t_finish_s=t_finish,
+        wait_s=wait,
+        tx_s=tx_s,
+        exec_s=exec_s,
+        latency_s=latency,
+        overflow=overflow,
+        events=events,
+    )

@@ -18,7 +18,7 @@ from repro.core.length_regressor import LinearN2M
 from repro.core.profiles import make_profile
 from repro.models.model import LM
 from repro.runtime.engine import CollaborativeEngine, Tier
-from repro.runtime.serving import GenerationSession
+from repro.runtime.serving import GenerationSession, make_tier_executor
 
 
 def main(argv=None):
@@ -50,12 +50,8 @@ def main(argv=None):
         return
 
     profile = make_profile("cp2", seed=0)
-
-    def edge_exec(tokens):
-        toks = np.minimum(np.asarray(tokens, np.int32)[None, :],
-                          cfg.vocab_size - 1)
-        res = sess.generate(toks, max_new=args.max_new)
-        return res.shape[1], res[0]
+    edge_exec = make_tier_executor(sess, max_new=args.max_new,
+                                   vocab_clip=cfg.vocab_size)
 
     engine = CollaborativeEngine(
         edge=Tier(DeviceProfile("edge", LinearLatencyModel(1e-4, 2e-3, 5e-3)),

@@ -32,15 +32,30 @@ def rope_freqs(head_dim: int, theta: float):
 
 
 def apply_rope(x, positions, theta: float):
-    """x (..., S, H, Dh), positions (..., S) -> rotated x (same dtype)."""
+    """x (..., S, H, Dh), positions (..., S) -> rotated x (same dtype).
+
+    Written as elementwise-mul + roll, with the duplicated cos/sin tables
+    built from a full-width iota rather than the textbook
+    concat-of-slices rotate-half: under GSPMD, `concatenate` along an
+    axis that ends up sharded (e.g. a GQA k/v projection whose
+    num_kv_heads < TP degree leaves Dh carrying the `model` axis) is
+    miscompiled by XLA CPU 0.4.x, silently producing per-shard-local
+    results.  This formulation is bitwise identical on replicated inputs
+    (the freq/sign tables take the same float32 values, and
+    a*c - b*s == a*c + b*(-s) in IEEE) and contains no concat at all,
+    so it partitions correctly under any sharding of Dh.
+    """
     dh = x.shape[-1]
-    freqs = rope_freqs(dh, theta)                     # (Dh/2,)
-    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,Dh/2)
-    cos = jnp.cos(angles)[..., None, :]               # (...,S,1,Dh/2)
-    sin = jnp.sin(angles)[..., None, :]
+    # full-width tables via index arithmetic: entry i and i + dh/2 carry
+    # the same frequency; the sign flips across the halfway boundary.
+    idx = jnp.arange(dh, dtype=jnp.float32)
+    freqs_full = 1.0 / (theta ** ((idx % (dh // 2)) * 2.0 / dh))   # (Dh,)
+    sign_full = jnp.where(idx < dh // 2, -1.0, 1.0)                # (Dh,)
+    angles = positions[..., None].astype(jnp.float32) * freqs_full  # (...,S,Dh)
+    cos_full = jnp.cos(angles)[..., None, :]                       # (...,S,1,Dh)
+    sin_full = jnp.sin(angles)[..., None, :] * sign_full
     xf = x.astype(jnp.float32)
-    x1, x2 = xf[..., : dh // 2], xf[..., dh // 2:]
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = xf * cos_full + jnp.roll(xf, dh // 2, axis=-1) * sin_full
     return out.astype(x.dtype)
 
 

@@ -5,6 +5,7 @@ from repro.runtime.serving import (
     GenerationSession,
     make_prefill_step,
     make_serve_step,
+    make_tier_executor,
 )
 from repro.runtime.engine import CollaborativeEngine, Tier, RequestResult
 
@@ -12,6 +13,7 @@ __all__ = [
     "GenerationSession",
     "make_prefill_step",
     "make_serve_step",
+    "make_tier_executor",
     "CollaborativeEngine",
     "Tier",
     "RequestResult",

@@ -1,42 +1,78 @@
-"""The C-NMT technique as a first-class serving feature: a tiered engine
-that routes each request edge/cloud by the paper's decision rule.
+"""N-tier collaborative serving engine: the C-NMT decision rule
+generalized to a fleet of heterogeneous compute tiers with per-tier
+queues — the production integration of ``repro.core``.
 
-This is the production integration of ``repro.core``: the same
-CNMTScheduler, length regressor and TxEstimator, driving either
+Each :class:`Tier` is one place an inference can run (on-device NPU,
+edge gateway, regional pod, central cloud, ...) and carries
 
-* REAL execution — a tier carries an executor callable (e.g. a
-  ``repro.nmt`` translate fn, or a :class:`GenerationSession` for the
-  big-model stack on CPU-reduced configs), and the engine measures
-  actual wall-clock; or
-* MODELLED execution — a tier carries only its latency plane (fitted by
-  ``core.calibration`` or priced from dry-run rooflines via
-  ``device_from_roofline``), and the engine simulates the latency.  This
-  is how TPU-pod tiers we cannot run locally participate.
+* a latency plane (``DeviceProfile`` — measured by ``core.calibration``
+  or priced from dry-run rooflines via ``device_from_roofline``),
+* optionally a REAL executor callable (a ``repro.nmt`` translate fn or a
+  :class:`~repro.runtime.serving.GenerationSession`) — the engine then
+  measures actual wall-clock; without one the tier is MODELLED and the
+  engine simulates the latency (how TPU-pod tiers we cannot run locally
+  participate, mirroring the paper's simulated network + real inference
+  testbed),
+* optionally a live link (``rtt_fn``) — its T_tx is tracked through
+  §II-C timestamped samples of *offloaded* requests only, one
+  :class:`TxEstimator` per link,
+* a concurrency limit (``servers``) and a bounded FIFO queue
+  (``queue_capacity``) — the engine keeps per-tier occupancy in virtual
+  time, so a busy tier's queue delay enters the decision rule:
 
-Mixed setups (real edge + modelled cloud) mirror the paper's testbed,
-where the network was simulated but inference was real.
+      d_tgt = argmin_k [ T_queue,k + T_tx,k + T_exe,k(N, M_hat) ]
+
+With two tiers (local edge + one cloud behind a link) and empty queues
+this reduces exactly to paper Eq. (1)/(2); the regression tests pin the
+reduction bit-for-bit against the seed engine semantics.  An optional
+online-feedback loop (``refit_interval``) refits the scheduler's planes
+and the N->M regressor from observed completions every K requests.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.calibration import OnlineCalibrator
 from repro.core.latency_model import DeviceProfile, bytes_for_tokens
 from repro.core.length_regressor import LinearN2M
-from repro.core.scheduler import CLOUD, EDGE, CNMTScheduler, Decision
+from repro.core.scheduler import (
+    MultiTierDecision,
+    MultiTierScheduler,
+    SchedTier,
+)
 from repro.core.tx_estimator import TxEstimator
 
 
 @dataclasses.dataclass
 class Tier:
-    """One compute tier (edge gateway / cloud pod)."""
+    """One compute tier (device NPU / edge gateway / regional pod / cloud).
+
+    ``rtt_fn(now) -> rtt_seconds`` marks a REMOTE tier (a ConnectionProfile's
+    ``rtt_at`` in experiments; a real prober in deployment); None marks a
+    local tier.  ``servers`` bounds concurrent executions; up to
+    ``queue_capacity`` further requests wait in FIFO order (None =
+    unbounded).
+    """
 
     profile: DeviceProfile
     executor: Optional[Callable] = None   # tokens -> (m_out, out_tokens)
+    name: Optional[str] = None
+    rtt_fn: Optional[Callable[[float], float]] = None
+    servers: int = 1
+    queue_capacity: Optional[int] = None
+    bandwidth_bps: float = 100e6
+
+    def __post_init__(self):
+        if self.name is None:
+            self.name = self.profile.name
+        if self.servers < 1:
+            raise ValueError("servers must be >= 1")
 
     def run(self, tokens: np.ndarray, m_hat: float,
             rng: np.random.Generator) -> tuple[int, float]:
@@ -50,75 +86,206 @@ class Tier:
         return int(max(round(m_hat), 1)), t
 
 
+class _TierOccupancy:
+    """Virtual-time FIFO bookkeeping for one tier: ``free_at`` holds each
+    server's next-free time; assigned-but-not-started requests count
+    against the bounded queue."""
+
+    def __init__(self, servers: int):
+        self.free_at = [0.0] * servers      # heap
+        self.inflight: List[tuple] = []     # (start, finish), pruned lazily
+
+    def _prune(self, now: float) -> None:
+        self.inflight = [(s, f) for s, f in self.inflight if f > now]
+
+    def queue_delay(self, now: float) -> float:
+        d = self.free_at[0] - now
+        return d if d > 0.0 else 0.0
+
+    def queue_len(self, now: float) -> int:
+        self._prune(now)
+        return sum(1 for s, _ in self.inflight if s > now)
+
+    def assign(self, now: float, exec_s: float) -> float:
+        """FIFO-assign one request; returns its wait (T_queue)."""
+        self._prune(now)                 # keep inflight bounded over time
+        earliest = heapq.heappop(self.free_at)
+        wait = earliest - now
+        if wait <= 0.0:
+            wait = 0.0
+        start = now + wait
+        finish = start + exec_s
+        heapq.heappush(self.free_at, finish)
+        self.inflight.append((start, finish))
+        return wait
+
+
 @dataclasses.dataclass
 class RequestResult:
     req_id: int
-    device: int           # EDGE / CLOUD
+    device: int           # tier index (EDGE/CLOUD for the 2-tier config)
     n: int
     m_out: int
-    latency_s: float      # execution + (tx if offloaded)
-    decision: Decision
+    latency_s: float      # queue wait + execution + (tx if offloaded)
+    decision: MultiTierDecision
+    wait_s: float = 0.0
+    tier_name: str = ""
 
 
 class CollaborativeEngine:
-    """Paper Eq. (1)/(2) in the serve path.
+    """Queue-aware N-tier serving under the generalized C-NMT rule.
 
-    ``rtt_fn(now)`` models the live network (a ConnectionProfile's
-    ``rtt_at`` in experiments; a real prober in deployment).  The engine
-    feeds the TxEstimator exactly like §II-C: every offloaded request
-    contributes a timestamped RTT sample.
+    Construct either with ``tiers=[...]`` (each Tier carrying its own
+    ``rtt_fn`` when remote) or with the paper-faithful two-tier keywords
+    ``edge=Tier(...), cloud=Tier(...), rtt_fn=...`` — the latter builds a
+    local edge + remote cloud pair whose empty-queue decisions reproduce
+    the seed engine (CNMTScheduler + single TxEstimator) bit-for-bit.
+
+    ``refit_interval`` (beyond paper) closes the feedback loop: every K
+    completed requests an :class:`OnlineCalibrator` refits the
+    scheduler's per-tier planes and the LinearN2M regressor from the
+    observed (N, M_out, T_exe) samples; the scheduler then operates on
+    its own model copies so ground-truth tier profiles stay untouched.
     """
 
-    def __init__(self, *, edge: Tier, cloud: Tier, n2m: LinearN2M,
-                 rtt_fn: Callable[[float], float],
+    def __init__(self, *, n2m: LinearN2M,
+                 tiers: Optional[Sequence[Tier]] = None,
+                 edge: Optional[Tier] = None,
+                 cloud: Optional[Tier] = None,
+                 rtt_fn: Optional[Callable[[float], float]] = None,
                  bytes_per_token: int = 2,
                  hedge_margin_s: float = 0.0,
-                 seed: int = 0):
-        self.edge, self.cloud = edge, cloud
-        self.scheduler = CNMTScheduler(
-            edge=edge.profile, cloud=cloud.profile, n2m=n2m,
-            bytes_per_token=bytes_per_token, hedge_margin_s=hedge_margin_s)
-        self.tx = TxEstimator(init_rtt_s=float(rtt_fn(0.0)))
-        self.rtt_fn = rtt_fn
+                 seed: int = 0,
+                 refit_interval: Optional[int] = None):
+        if tiers is None:
+            if edge is None or cloud is None or rtt_fn is None:
+                raise ValueError("pass tiers=[...] or edge/cloud/rtt_fn")
+            edge = dataclasses.replace(edge, name=edge.name or "edge",
+                                       rtt_fn=None)
+            cloud = dataclasses.replace(cloud, name=cloud.name or "cloud",
+                                        rtt_fn=rtt_fn)
+            tiers = [edge, cloud]
+        self.tiers: List[Tier] = list(tiers)
+        if not self.tiers:
+            raise ValueError("need at least one tier")
+
+        sched_tiers = []
+        for t in self.tiers:
+            model = t.profile.model
+            if refit_interval is not None:
+                model = dataclasses.replace(model)   # scheduler-owned copy
+            tx = None
+            if t.rtt_fn is not None:
+                tx = TxEstimator(init_rtt_s=float(t.rtt_fn(0.0)),
+                                 bandwidth_bps=t.bandwidth_bps)
+            sched_tiers.append(SchedTier(t.name, model, tx))
+        n2m_model = dataclasses.replace(n2m) if refit_interval is not None \
+            else n2m
+        self.scheduler = MultiTierScheduler(
+            sched_tiers, n2m_model, bytes_per_token=bytes_per_token,
+            hedge_margin_s=hedge_margin_s)
+        self.calibrator = None if refit_interval is None else \
+            OnlineCalibrator(len(self.tiers), interval=refit_interval)
+
+        self._occ = [_TierOccupancy(t.servers) for t in self.tiers]
         self.rng = np.random.default_rng(seed)
         self.results: List[RequestResult] = []
+        self.rejected = np.zeros(len(self.tiers), np.int64)
         self._t0 = time.perf_counter()
         self._next_id = 0
+
+    # convenience handles for the 2-tier configuration ---------------------
+    @property
+    def edge(self) -> Tier:
+        return self.tiers[0]
+
+    @property
+    def cloud(self) -> Tier:
+        return self.tiers[1]
+
+    @property
+    def tx(self) -> Optional[TxEstimator]:
+        """First remote tier's link estimator (the §II-C state)."""
+        for st in self.scheduler.tiers:
+            if st.tx is not None:
+                return st.tx
+        return None
 
     def _now(self) -> float:
         return time.perf_counter() - self._t0
 
+    # ------------------------------------------------------------- submit --
     def submit(self, tokens: np.ndarray, *, now_s: Optional[float] = None
                ) -> RequestResult:
         now = self._now() if now_s is None else now_s
         n = int(len(tokens))
-        d = self.scheduler.decide(n, now, self.tx)
-        if d.device == EDGE:
-            m_out, exec_s = self.edge.run(tokens, d.m_hat, self.rng)
-            latency = exec_s
+        qd = [occ.queue_delay(now) for occ in self._occ]
+        d = self.scheduler.decide(n, now, qd)
+        k = self._admit(d, now)
+        tier = self.tiers[k]
+
+        m_out, exec_s = tier.run(tokens, d.m_hat, self.rng)
+        wait = self._occ[k].assign(now, exec_s)
+        if tier.rtt_fn is not None:
+            rtt = float(tier.rtt_fn(now))
+            payload = float(bytes_for_tokens(
+                n + m_out, self.scheduler.bytes_per_token))
+            tx = self.scheduler.tiers[k].tx
+            net = exec_s + rtt + payload * 8.0 / tx.bandwidth_bps
+            tx.observe(now, rtt)       # §II-C timestamp mechanism, per link
         else:
-            m_out, exec_s = self.cloud.run(tokens, d.m_hat, self.rng)
-            rtt = float(self.rtt_fn(now))
-            payload = float(bytes_for_tokens(n + m_out,
-                                             self.scheduler.bytes_per_token))
-            latency = exec_s + rtt + payload * 8.0 / self.tx.bandwidth_bps
-            self.tx.observe(now, rtt)      # §II-C timestamp mechanism
-        res = RequestResult(self._next_id, d.device, n, m_out, latency, d)
+            net = exec_s
+        latency = wait + net
+
+        res = RequestResult(self._next_id, k, n, m_out, latency, d,
+                            wait_s=wait, tier_name=tier.name)
         self._next_id += 1
         self.results.append(res)
+        if self.calibrator is not None:
+            if self.calibrator.record(k, n, m_out, exec_s):
+                self.calibrator.refit(
+                    [st.model for st in self.scheduler.tiers],
+                    self.scheduler.n2m)
         return res
 
+    def _admit(self, d: MultiTierDecision, now: float) -> int:
+        """Bounded-FIFO admission: re-route from a full tier to the
+        next-best tier with space; if everything is full, keep the choice
+        and count the rejection."""
+        k = d.tier
+        if self._has_space(k, now):
+            return k
+        for j in sorted(range(len(self.tiers)), key=lambda j: d.t_pred[j]):
+            if self._has_space(j, now):
+                return j
+        self.rejected[k] += 1
+        return k
+
+    def _has_space(self, k: int, now: float) -> bool:
+        cap = self.tiers[k].queue_capacity
+        if cap is None or self._occ[k].queue_delay(now) == 0.0:
+            return True          # unbounded, or a server is free right now
+        return self._occ[k].queue_len(now) < cap
+
     # ------------------------------------------------------------- stats --
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, object]:
         if not self.results:
             return {}
         lat = np.array([r.latency_s for r in self.results])
-        off = np.array([r.device == CLOUD for r in self.results])
+        wait = np.array([r.wait_s for r in self.results])
+        dev = np.array([r.device for r in self.results])
+        remote = np.array([t.rtt_fn is not None for t in self.tiers])
+        tx = self.tx
         return {
             "requests": len(self.results),
             "total_latency_s": float(lat.sum()),
             "mean_latency_s": float(lat.mean()),
+            "p50_latency_s": float(np.percentile(lat, 50)),
             "p95_latency_s": float(np.percentile(lat, 95)),
-            "offload_frac": float(off.mean()),
-            "tx_estimate_s": self.tx.rtt(0.0),
+            "mean_wait_s": float(wait.mean()),
+            "offload_frac": float(np.mean(remote[dev])),
+            "tier_frac": {t.name: float(np.mean(dev == k))
+                          for k, t in enumerate(self.tiers)},
+            "rejected": int(self.rejected.sum()),
+            "tx_estimate_s": 0.0 if tx is None else tx.rtt(0.0),
         }

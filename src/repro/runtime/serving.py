@@ -6,7 +6,10 @@ new token against a KV cache (or SSM state) of the configured context.
 
 :class:`GenerationSession` drives them for real CPU generation (smoke
 scale): prefill once, then greedy decode with EOS handling — the serving
-analog of ``repro.nmt``'s translate loop.
+analog of ``repro.nmt``'s translate loop.  :func:`make_tier_executor`
+adapts a session into the ``tokens -> (m_out, out_tokens)`` callable a
+:class:`~repro.runtime.engine.Tier` expects, so a real model can serve as
+any tier of the N-tier collaborative engine.
 """
 
 from __future__ import annotations
@@ -42,6 +45,25 @@ def make_serve_step(model: LM) -> Callable:
         return model.decode_step(params, state, tokens)
 
     return serve_step
+
+
+def make_tier_executor(session: "GenerationSession", *, max_new: int = 16,
+                       vocab_clip: Optional[int] = None) -> Callable:
+    """Adapt a GenerationSession into a Tier executor.
+
+    Returns ``executor(tokens) -> (m_out, out_tokens)`` for 1-D int token
+    arrays; ``vocab_clip`` guards against out-of-vocab ids when the
+    request stream's tokenizer is larger than the serving model's.
+    """
+
+    def executor(tokens: np.ndarray):
+        toks = np.asarray(tokens, np.int32)[None, :]
+        if vocab_clip is not None:
+            toks = np.minimum(toks, vocab_clip - 1)
+        out = session.generate(toks, max_new=max_new)
+        return int(out.shape[1]), out[0]
+
+    return executor
 
 
 class GenerationSession:

@@ -1,0 +1,127 @@
+"""Dependency-light `hypothesis` shim for the test suite.
+
+Tier-1 must collect and pass with or without `hypothesis` installed
+(`requirements-dev.txt` pins the real thing for dev machines/CI).  When
+the real library is importable we re-export it untouched; otherwise we
+fall back to a tiny seeded-random property runner that supports the
+subset this repo's tests use:
+
+* ``@given(name=strategy, ...)`` — draws ``max_examples`` example dicts
+  from a per-test deterministic RNG (seeded from the test's qualname,
+  so failures are reproducible run-to-run) and calls the test once per
+  example, printing the falsifying example on failure;
+* ``@settings(max_examples=..., deadline=...)`` — ``max_examples`` is
+  honored, ``deadline`` ignored (the fallback has no shrinking/timing);
+* ``st.integers / st.floats / st.sampled_from / st.lists /
+  st.booleans / st.just / st.tuples``.
+
+Import in tests as ``from _hypothesis_compat import given, settings, st``.
+"""
+
+from __future__ import annotations
+
+try:  # prefer the real library when present
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn, label):
+            self._draw = draw_fn
+            self._label = label
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self._label
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             f"integers({min_value}, {max_value})")
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value),
+                             f"floats({min_value}, {max_value})")
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            if not seq:
+                raise ValueError("sampled_from needs a non-empty sequence")
+            return _Strategy(lambda r: seq[r.randrange(len(seq))],
+                             f"sampled_from({seq!r})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5, "booleans()")
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda r: value, f"just({value!r})")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                size = r.randint(min_size, max_size)
+                return [elements.draw(r) for _ in range(size)]
+
+            return _Strategy(draw, f"lists({elements!r})")
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda r: tuple(s.draw(r) for s in strategies),
+                             f"tuples({strategies!r})")
+
+    st = _Strategies()
+
+    def settings(**cfg):
+        """Record settings on the (possibly already-wrapped) test fn."""
+
+        def deco(fn):
+            merged = dict(getattr(fn, "_compat_settings", {}))
+            merged.update(cfg)
+            fn._compat_settings = merged
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(wrapper, "_compat_settings", {})
+                max_examples = int(cfg.get("max_examples", 20))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for _ in range(max_examples):
+                    example = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **example, **kwargs)
+                    except Exception:
+                        print(f"Falsifying example ({fn.__qualname__}): "
+                              f"{example!r}")
+                        raise
+
+            wrapper._compat_settings = dict(getattr(fn, "_compat_settings", {}))
+            # pytest must not mistake the drawn parameters for fixtures:
+            # hide the wrapped signature (all params are supplied by draws).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,202 @@
+"""Discrete-event simulator invariants: event ordering, conservation,
+per-tier FIFO, bounded queues, determinism, and zero-load equivalence
+with the paper-faithful analytic replay."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.calibration import OnlineCalibrator
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import make_profile
+from repro.core.scheduler import CNMTScheduler, MultiTierScheduler, SchedTier
+from repro.core.simulator import (
+    RequestStream,
+    SimTier,
+    make_poisson_stream,
+    simulate,
+    simulate_des,
+)
+from repro.core.tx_estimator import TxEstimator
+
+
+def _three_tier(seed=5, npu_cap=8):
+    npu = DeviceProfile("npu", LinearLatencyModel(4e-4, 1.6e-3, 0.004), 0.05)
+    edge = DeviceProfile("edge", LinearLatencyModel(1.5e-4, 6e-4, 0.008), 0.05)
+    cloud = DeviceProfile("cloud", LinearLatencyModel(2e-5, 9e-5, 0.002), 0.08)
+    lan, wan = make_profile("cp2", seed=seed), make_profile("cp1", seed=seed)
+    tiers = [SimTier("npu", npu, servers=1, queue_capacity=npu_cap),
+             SimTier("edge", edge, servers=2, queue_capacity=64, link=lan),
+             SimTier("cloud", cloud, servers=8, link=wan)]
+    sched = MultiTierScheduler(
+        [SchedTier("npu", dataclasses.replace(npu.model), None),
+         SchedTier("edge", dataclasses.replace(edge.model),
+                   TxEstimator(init_rtt_s=float(lan.rtt_at(0.0)))),
+         SchedTier("cloud", dataclasses.replace(cloud.model),
+                   TxEstimator(init_rtt_s=float(wan.rtt_at(0.0))))],
+        LinearN2M(0.9, 2.0))
+    return sched, tiers
+
+
+def _stream(k=2000, rate=50.0, seed=2):
+    rng = np.random.default_rng(seed)
+    n = rng.integers(2, 200, k).astype(np.float64)
+    m = np.maximum(0.9 * n + rng.normal(0, 3, k), 1.0)
+    return make_poisson_stream(n, m, m, rate_hz=rate, seed=seed)
+
+
+def _loaded_run(rate=80.0, **kw):
+    sched, tiers = _three_tier(**kw)
+    stream = _stream(rate=rate)
+    return stream, simulate_des(sched, stream, tiers, seed=0,
+                                collect_events=True)
+
+
+# ------------------------------------------------------------- invariants --
+def test_event_times_nondecreasing():
+    _, r = _loaded_run()
+    times = [e[0] for e in r.events]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+def test_conservation_every_arrival_finishes_exactly_once():
+    stream, r = _loaded_run()
+    k = len(stream)
+    # one arrival + one finish event per request, no extras
+    arrivals = [e[2] for e in r.events if e[1] == "arrival"]
+    finishes = [e[2] for e in r.events if e[1] == "finish"]
+    assert sorted(arrivals) == list(range(k))
+    assert sorted(finishes) == list(range(k))
+    assert np.all(r.tier >= 0) and np.all(r.tier < 3)
+    assert np.all(r.t_start_s >= r.t_arrival_s - 1e-12)
+    assert np.all(r.t_finish_s > r.t_start_s)
+    assert np.all(np.isfinite(r.latency_s)) and np.all(r.latency_s > 0)
+    assert np.allclose(r.latency_s, r.wait_s + r.exec_s + r.tx_s)
+
+
+def test_fifo_within_each_tier():
+    """Among requests served by one tier, start order == arrival order."""
+    _, r = _loaded_run()
+    assert r.wait_s.max() > 0, "load too low to exercise queues"
+    for k in range(3):
+        sel = np.where(r.tier == k)[0]
+        order = sel[np.argsort(r.t_arrival_s[sel], kind="stable")]
+        starts = r.t_start_s[order]
+        assert np.all(np.diff(starts) >= -1e-12)
+
+
+def test_server_capacity_never_exceeded():
+    _, r = _loaded_run()
+    caps = {0: 1, 1: 2, 2: 8}
+    for k, servers in caps.items():
+        sel = r.tier == k
+        if not sel.any():
+            continue
+        events = sorted(
+            [(t, 1) for t in r.t_start_s[sel]]
+            + [(t, -1) for t in r.t_finish_s[sel]],
+            key=lambda e: (e[0], e[1]))   # finish before start on ties
+        load, peak = 0, 0
+        for _, d in events:
+            load += d
+            peak = max(peak, load)
+        assert peak <= servers, (k, peak, servers)
+
+
+def test_bounded_queue_reroutes_under_burst():
+    """A tiny NPU queue under heavy load forces rerouting: the NPU's
+    waiting line never exceeds its capacity."""
+    stream, r = _loaded_run(rate=500.0, npu_cap=2)
+    sel = r.tier == 0
+    # waiting count over time at tier 0: arrivals assigned - starts
+    times = sorted([(t, +1) for t in r.t_arrival_s[sel]]
+                   + [(t, -1) for t in r.t_start_s[sel]],
+                   key=lambda e: (e[0], e[1]))
+    q, peak = 0, 0
+    for _, d in times:
+        q += d
+        peak = max(peak, q)
+    # capacity 2 waiting + 1 in service; forced enqueues are counted
+    assert peak <= 2 + 1 + int(r.overflow[0])
+
+
+def test_des_deterministic_given_seed():
+    sched1, tiers1 = _three_tier()
+    sched2, tiers2 = _three_tier()
+    stream = _stream(k=800)
+    a = simulate_des(sched1, stream, tiers1, seed=9)
+    b = simulate_des(sched2, stream, tiers2, seed=9)
+    assert np.array_equal(a.tier, b.tier)
+    assert np.array_equal(a.latency_s, b.latency_s)
+
+
+# --------------------------------------------------- zero-load equivalence --
+def test_zero_load_matches_analytic_replay_bitwise():
+    """1s-spaced arrivals with ~0.15s max service: every request finds
+    empty queues, so the DES must reproduce the analytic replay's
+    decisions AND latencies exactly (same seed, same draws)."""
+    edge = DeviceProfile("e", LinearLatencyModel(1.5e-4, 6e-4, 0.008), 0.03)
+    cloud = DeviceProfile("c", LinearLatencyModel(3e-5, 1.2e-4, 0.0016), 0.03)
+    n2m = LinearN2M(0.9, 2.0)
+    profile = make_profile("cp2", seed=0)
+    rng = np.random.default_rng(1)
+    k = 2000
+    n = rng.integers(2, 200, k).astype(np.float64)
+    m = np.maximum(0.9 * n + rng.normal(0, 3, k), 1.0)
+    stream = RequestStream(t_arrival_s=np.arange(k) * 1.0,
+                           n=n, m_out=m, m_real=m)
+
+    analytic = simulate(CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m),
+                        stream, profile, edge, cloud, seed=0)
+    multi = MultiTierScheduler(
+        [SchedTier("e", edge.model, None),
+         SchedTier("c", cloud.model,
+                   TxEstimator(init_rtt_s=float(profile.rtt_at(0.0))))],
+        n2m)
+    des = simulate_des(multi, stream,
+                       [SimTier("e", edge), SimTier("c", cloud, link=profile)],
+                       seed=0)
+    assert des.wait_s.max() == 0.0
+    assert np.array_equal(analytic.device, des.tier)
+    assert np.array_equal(analytic.latency_s, des.latency_s)
+    assert 0.1 < analytic.offload_frac < 0.9   # both regimes exercised
+
+
+# ------------------------------------------------------------ load/refit ---
+def test_queue_pressure_shifts_load_to_deeper_tiers():
+    """As the Poisson rate rises, the shallow capacity-limited tiers
+    saturate and the cloud's share must grow."""
+    fracs = []
+    for rate in (5.0, 120.0):
+        sched, tiers = _three_tier()
+        r = simulate_des(sched, _stream(rate=rate), tiers, seed=0)
+        fracs.append(r.tier_frac()["cloud"])
+    assert fracs[1] > fracs[0]
+
+
+def test_online_refit_corrects_overconfident_plane_des():
+    """DES feedback loop: a scheduler whose edge plane is 20x too FAST
+    floods that tier, collects real completions, and refits back to
+    truth.  (The converse — a plane too slow — is a cold-start problem:
+    the tier draws no traffic, hence no samples; the refit deliberately
+    keeps the prior there.)"""
+    sched, tiers = _three_tier()
+    sched_wrong, tiers_w = _three_tier()
+    wrong = sched_wrong.tiers[1].model
+    wrong.alpha_n /= 20; wrong.alpha_m /= 20; wrong.beta /= 20
+    stream = _stream(k=3000, rate=30.0)
+    cal = OnlineCalibrator(3, interval=200)
+    simulate_des(sched_wrong, stream, tiers_w, seed=0, calibrator=cal)
+    assert cal.n_refits >= 5
+    # after refitting, the believed edge plane is close to truth again
+    truth = tiers[1].profile.model
+    assert sched_wrong.tiers[1].model.alpha_m == pytest.approx(
+        truth.alpha_m, rel=0.5)
+    # ...and routing matches the well-calibrated run's shape again
+    r_ref = simulate_des(sched, stream, tiers, seed=0)
+    r_post = simulate_des(sched_wrong, _stream(k=1000, rate=30.0, seed=4),
+                          tiers_w, seed=1)
+    assert abs(r_post.tier_frac()["edge"]
+               - r_ref.tier_frac()["edge"]) < 0.35

@@ -1,0 +1,121 @@
+"""Regression tests for §II-C staleness dynamics (the T_tx estimate moves
+ONLY on offloaded requests) and for CollaborativeEngine.stats() math on a
+deterministic seeded run."""
+
+import numpy as np
+import pytest
+
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import make_profile
+from repro.core.scheduler import CLOUD, EDGE, CNMTScheduler
+from repro.core.simulator import RequestStream, simulate
+from repro.core.tx_estimator import TxEstimator
+from repro.runtime.engine import CollaborativeEngine, Tier
+
+
+# --------------------------------------------------- §II-C staleness -------
+def test_tx_estimate_frozen_while_traffic_stays_local():
+    """In the analytic replay, an all-edge run must leave the estimator
+    exactly at its initial value: zero samples, zero drift."""
+    edge = DeviceProfile("e", LinearLatencyModel(1e-4, 1e-4, 1e-4), 0.0)
+    slow_cloud = DeviceProfile("c", edge.model.scaled(0.1), 0.0)
+    profile = make_profile("cp1", seed=1)
+    rng = np.random.default_rng(0)
+    k = 500
+    n = rng.integers(2, 200, k).astype(np.float64)
+    stream = RequestStream(np.sort(rng.uniform(0, 3600, k)), n, n, n)
+    est = TxEstimator(init_rtt_s=0.123)
+    r = simulate(CNMTScheduler(edge=edge, cloud=slow_cloud,
+                               n2m=LinearN2M(1.0, 0.0)),
+                 stream, profile, edge, slow_cloud, seed=0,
+                 tx_estimator=est)
+    assert r.offload_frac == 0.0
+    assert est.n_samples == 0
+    assert est.rtt(1e9) == 0.123           # stale forever, per the paper
+
+
+def test_tx_estimate_updates_exactly_on_offloads():
+    """Mixed run: sample count == offload count, and the estimate moved."""
+    edge = DeviceProfile("e", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.0)
+    cloud = DeviceProfile("c", edge.model.scaled(5.0), 0.0)
+    profile = make_profile("cp2", seed=1)
+    rng = np.random.default_rng(0)
+    k = 800
+    n = rng.integers(2, 200, k).astype(np.float64)
+    stream = RequestStream(np.sort(rng.uniform(0, 3600, k)), n, n, n)
+    est = TxEstimator(init_rtt_s=5.0)      # absurd prior: forces all-edge...
+    r = simulate(CNMTScheduler(edge=edge, cloud=cloud,
+                               n2m=LinearN2M(1.0, 0.0)),
+                 stream, profile, edge, cloud, seed=0, tx_estimator=est,
+                 probe_interval_s=600.0)   # ...until a probe corrects it
+    n_off = int((r.device == CLOUD).sum())
+    assert n_off > 0
+    # every offload contributed one timestamped sample; the remainder are
+    # the (at most ceil(3600/600)+1) periodic probe refreshes
+    assert n_off <= est.n_samples <= n_off + 8
+    assert est.rtt(0.0) < 5.0
+
+
+def test_engine_tx_samples_equal_offload_count():
+    edge = Tier(DeviceProfile("e", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.0))
+    cloud = Tier(DeviceProfile("c", LinearLatencyModel(4e-4, 1.6e-3, 0.002),
+                               0.0))
+    profile = make_profile("cp2", seed=7)
+    eng = CollaborativeEngine(edge=edge, cloud=cloud, n2m=LinearN2M(1.0, 0.0),
+                              rtt_fn=lambda t: float(profile.rtt_at(t)),
+                              seed=0)
+    rng = np.random.default_rng(3)
+    for i in range(300):
+        eng.submit(np.zeros(int(rng.integers(2, 200)), np.int32),
+                   now_s=float(i))
+    offloads = sum(r.device == CLOUD for r in eng.results)
+    assert 0 < offloads < 300
+    assert eng.tx.n_samples == offloads
+
+
+# ------------------------------------------------------------ stats math ---
+def _run_engine(k=400, seed=0):
+    edge = Tier(DeviceProfile("e", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.05))
+    cloud = Tier(DeviceProfile("c", LinearLatencyModel(4e-4, 1.6e-3, 0.002),
+                               0.08))
+    profile = make_profile("cp2", seed=3)
+    eng = CollaborativeEngine(edge=edge, cloud=cloud, n2m=LinearN2M(0.9, 2.0),
+                              rtt_fn=lambda t: float(profile.rtt_at(t)),
+                              seed=seed)
+    rng = np.random.default_rng(42)
+    for i in range(k):
+        eng.submit(np.zeros(int(rng.integers(2, 200)), np.int32),
+                   now_s=float(i))
+    return eng
+
+
+def test_stats_percentiles_and_offload_fraction():
+    eng = _run_engine()
+    s = eng.stats()
+    lat = np.array([r.latency_s for r in eng.results])
+    dev = np.array([r.device for r in eng.results])
+    assert s["requests"] == 400
+    assert s["total_latency_s"] == pytest.approx(lat.sum())
+    assert s["mean_latency_s"] == pytest.approx(lat.mean())
+    assert s["p50_latency_s"] == pytest.approx(np.percentile(lat, 50))
+    assert s["p95_latency_s"] == pytest.approx(np.percentile(lat, 95))
+    assert s["offload_frac"] == pytest.approx(np.mean(dev != EDGE))
+    assert s["p50_latency_s"] <= s["p95_latency_s"] <= lat.max()
+    fr = s["tier_frac"]
+    assert sum(fr.values()) == pytest.approx(1.0)
+    assert fr["c"] == pytest.approx(s["offload_frac"])
+    assert s["rejected"] == 0
+
+
+def test_stats_deterministic_given_seed():
+    a = _run_engine(seed=11).stats()
+    b = _run_engine(seed=11).stats()
+    assert a == b
+
+
+def test_stats_empty_engine():
+    edge = Tier(DeviceProfile("e", LinearLatencyModel(1e-3, 1e-3, 1e-3), 0.0))
+    eng = CollaborativeEngine(tiers=[edge], n2m=LinearN2M(1.0, 0.0), seed=0)
+    assert eng.stats() == {}
+    assert eng.tx is None

@@ -1,0 +1,283 @@
+"""N-tier scheduler + engine tests: the paper's Eq. (1) must fall out of
+the generalized rule as the N=2 special case (bit-for-bit), and the
+queue-aware machinery must behave sanely beyond it."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.latency_model import (
+    DeviceProfile,
+    LinearLatencyModel,
+    bytes_for_tokens,
+)
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import make_profile
+from repro.core.scheduler import (
+    CLOUD,
+    EDGE,
+    CNMTScheduler,
+    MultiTierScheduler,
+    OracleScheduler,
+    SchedTier,
+    StaticScheduler,
+)
+from repro.core.simulator import RequestStream, simulate
+from repro.core.tx_estimator import TxEstimator
+from repro.runtime.engine import CollaborativeEngine, Tier
+
+
+def _pair(speedup=5.0):
+    edge = DeviceProfile("e", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.0)
+    cloud = DeviceProfile("c", LinearLatencyModel(2e-3 / speedup,
+                                                  8e-3 / speedup,
+                                                  0.01 / speedup), 0.0)
+    return edge, cloud
+
+
+def _multi(edge, cloud, n2m, rtt, hedge=0.0):
+    return MultiTierScheduler(
+        [SchedTier("e", edge.model, None),
+         SchedTier("c", cloud.model, TxEstimator(init_rtt_s=rtt))],
+        n2m, hedge_margin_s=hedge)
+
+
+# ------------------------------------------------ N=2 reduction to Eq. (1) --
+@pytest.mark.property
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    rtt=st.floats(1e-4, 1.0),
+    speedup=st.floats(1.5, 20.0),
+    gamma=st.floats(0.3, 1.5),
+    hedge=st.sampled_from([0.0, 1e-3, 5e-2]),
+)
+def test_two_tier_decide_matches_cnmt(n, rtt, speedup, gamma, hedge):
+    """Empty-queue 2-tier MultiTierScheduler == CNMTScheduler.decide,
+    device AND predicted totals, for random planes/RTTs/margins."""
+    edge, cloud = _pair(speedup)
+    n2m = LinearN2M(gamma, 1.0)
+    cnmt = CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m,
+                         hedge_margin_s=hedge)
+    multi = _multi(edge, cloud, n2m, rtt, hedge)
+    d_ref = cnmt.decide(n, 0.0, TxEstimator(init_rtt_s=rtt))
+    d = multi.decide(n, 0.0)
+    assert d.tier == d_ref.device
+    assert d.t_pred[EDGE] == d_ref.t_edge_pred
+    assert d.t_pred[CLOUD] == d_ref.t_cloud_pred
+    assert d.m_hat == d_ref.m_hat
+
+
+@pytest.mark.property
+@settings(max_examples=25, deadline=None)
+@given(
+    speedup=st.floats(1.5, 20.0),
+    rtt=st.floats(1e-4, 0.5),
+    gamma=st.floats(0.3, 1.5),
+    hedge=st.sampled_from([0.0, 2e-2]),
+    seed=st.integers(0, 1000),
+)
+def test_two_tier_decide_batch_matches_cnmt(speedup, rtt, gamma, hedge, seed):
+    edge, cloud = _pair(speedup)
+    n2m = LinearN2M(gamma, 1.0)
+    cnmt = CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m,
+                         hedge_margin_s=hedge)
+    multi = _multi(edge, cloud, n2m, rtt, hedge)
+    rng = np.random.default_rng(seed)
+    ns = rng.integers(1, 300, size=64)
+    rtts = np.full(64, rtt)
+    assert np.array_equal(multi.decide_batch(ns, rtts),
+                          cnmt.decide_batch(ns, rtts))
+
+
+def test_decide_fast_agrees_with_decide_on_device():
+    edge, cloud = _pair()
+    multi = _multi(edge, cloud, LinearN2M(0.9, 1.0), 0.05)
+    for n in (2, 20, 60, 150, 290):
+        d = multi.decide(n, 0.0)
+        df = multi.decide_fast(float(n), d.m_hat, 0.0)
+        assert df.tier == d.tier
+        assert df.t_pred[d.tier] == pytest.approx(d.t_pred[d.tier], rel=1e-5)
+
+
+# -------------------------------------------------------- N-tier semantics --
+def test_queue_delay_diverts_to_next_best_tier():
+    edge, cloud = _pair()
+    multi = _multi(edge, cloud, LinearN2M(1.0, 0.0), 0.001)
+    n = 200  # long request: cloud wins with empty queues
+    assert multi.decide(n, 0.0).tier == CLOUD
+    # pile predicted backlog onto the cloud tier -> edge takes over
+    assert multi.decide(n, 0.0, [0.0, 10.0]).tier == EDGE
+
+
+def test_hedge_prefers_fastest_local_tier():
+    edge, cloud = _pair()
+    slow_local = DeviceProfile("l2", edge.model.scaled(0.5), 0.0)
+    sched = MultiTierScheduler(
+        [SchedTier("l2", slow_local.model, None),
+         SchedTier("e", edge.model, None),
+         SchedTier("c", cloud.model, TxEstimator(init_rtt_s=1e-4))],
+        LinearN2M(1.0, 0.0), hedge_margin_s=1e9)
+    d = sched.decide(100, 0.0)
+    assert d.tier == 1          # fastest LOCAL, not the globally fastest
+    assert d.t_pred[2] < d.t_pred[1]  # cloud was predicted faster
+
+
+def test_three_tier_picks_argmin():
+    edge, cloud = _pair()
+    mid = DeviceProfile("m", edge.model.scaled(2.0), 0.0)
+    sched = MultiTierScheduler(
+        [SchedTier("e", edge.model, None),
+         SchedTier("m", mid.model, TxEstimator(init_rtt_s=1e-4)),
+         SchedTier("c", cloud.model, TxEstimator(init_rtt_s=1e-4))],
+        LinearN2M(1.0, 0.0))
+    for n in (1, 5, 20, 80, 300):
+        d = sched.decide(n, 0.0)
+        assert d.t_pred[d.tier] == min(d.t_pred)
+
+
+def test_observe_rtt_feeds_only_that_tier():
+    edge, cloud = _pair()
+    sched = MultiTierScheduler(
+        [SchedTier("e", edge.model, None),
+         SchedTier("c1", cloud.model, TxEstimator(init_rtt_s=0.5)),
+         SchedTier("c2", cloud.model, TxEstimator(init_rtt_s=0.5))],
+        LinearN2M(1.0, 0.0))
+    sched.observe_rtt(0, 0.0, 0.1)   # local tier: no-op
+    sched.observe_rtt(1, 0.0, 0.01)
+    assert sched.tiers[1].tx.n_samples == 1
+    assert sched.tiers[2].tx.n_samples == 0
+    assert sched.tiers[1].tx.rtt(0.0) < sched.tiers[2].tx.rtt(0.0)
+
+
+# ------------------------------------------------- oracle lower bound prop --
+@pytest.mark.property
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    speedup=st.floats(1.2, 12.0),
+    noise=st.floats(0.0, 0.1),
+)
+def test_oracle_lower_bounds_all_policies_on_random_streams(seed, speedup, noise):
+    rng = np.random.default_rng(seed)
+    k = 300
+    n = rng.integers(1, 200, k).astype(np.float64)
+    m = np.maximum(0.8 * n + rng.normal(0, 4, k), 1.0)
+    stream = RequestStream(t_arrival_s=np.sort(rng.uniform(0, 3600.0, k)),
+                           n=n, m_out=m, m_real=m)
+    edge = DeviceProfile("e", LinearLatencyModel(2e-3, 8e-3, 0.01), noise)
+    cloud = DeviceProfile("c", edge.model.scaled(speedup), noise)
+    profile = make_profile("cp1" if seed % 2 else "cp2", seed=seed)
+    n2m = LinearN2M().fit(n, m)
+    oracle = simulate(OracleScheduler(), stream, profile, edge, cloud,
+                      seed=seed)
+    for pol in (StaticScheduler(EDGE), StaticScheduler(CLOUD),
+                CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m)):
+        r = simulate(pol, stream, profile, edge, cloud, seed=seed)
+        assert r.total_s >= oracle.total_s - 1e-9
+
+
+def test_oracle_multi_tier_argmin():
+    totals = np.array([[3.0, 1.0, 2.0],
+                       [1.0, 2.0, 2.0],
+                       [2.0, 3.0, 1.0]])
+    assert np.array_equal(OracleScheduler.decide_batch_multi(totals),
+                          [1, 0, 2])
+
+
+# ------------------------------------- N=2 engine bit-for-bit regression ---
+def test_engine_two_tier_reproduces_seed_semantics_bit_for_bit():
+    """The seed CollaborativeEngine was CNMTScheduler + one TxEstimator +
+    one shared rng; replay those semantics inline over a seeded 1k-request
+    stream and demand identical devices, output lengths AND latencies."""
+    edge_p = DeviceProfile("edge", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.05)
+    cloud_p = DeviceProfile("cloud", LinearLatencyModel(4e-4, 1.6e-3, 0.002),
+                            0.08)
+    profile = make_profile("cp2", seed=3)
+    rtt_fn = lambda t: float(profile.rtt_at(t))
+    n2m = LinearN2M(0.9, 2.0)
+    lens = np.random.default_rng(42).integers(2, 200, size=1000)
+
+    sched = CNMTScheduler(edge=edge_p, cloud=cloud_p, n2m=n2m)
+    tx = TxEstimator(init_rtt_s=float(rtt_fn(0.0)))
+    rng = np.random.default_rng(0)
+    ref = []
+    for i, n in enumerate(lens):
+        now = float(i)
+        d = sched.decide(int(n), now, tx)
+        prof = edge_p if d.device == EDGE else cloud_p
+        t = float(prof.true_time(float(n), d.m_hat, rng))
+        m_out = int(max(round(d.m_hat), 1))
+        if d.device == EDGE:
+            lat = t
+        else:
+            rtt = float(rtt_fn(now))
+            payload = float(bytes_for_tokens(int(n) + m_out, 2))
+            lat = t + rtt + payload * 8.0 / tx.bandwidth_bps
+            tx.observe(now, rtt)
+        ref.append((d.device, m_out, lat))
+
+    eng = CollaborativeEngine(edge=Tier(edge_p), cloud=Tier(cloud_p),
+                              n2m=n2m, rtt_fn=rtt_fn, seed=0)
+    for i, n in enumerate(lens):
+        r = eng.submit(np.zeros(int(n), np.int32), now_s=float(i))
+        dev, m_out, lat = ref[i]
+        assert r.device == dev
+        assert r.m_out == m_out
+        assert r.latency_s == lat          # bitwise: no tolerance
+        assert r.wait_s == 0.0
+    # both tiers exercised, and the link estimator saw every offload
+    devs = np.array([r[0] for r in ref])
+    assert 0.0 < devs.mean() < 1.0
+    assert eng.tx.n_samples == int((devs == CLOUD).sum())
+
+
+# ---------------------------------------------------- engine queue/refit ---
+def test_engine_virtual_time_queue_delay():
+    """Two simultaneous long requests on a 1-server edge: the second waits
+    exactly the first's execution time."""
+    edge_p = DeviceProfile("edge", LinearLatencyModel(1e-3, 1e-3, 0.05), 0.0)
+    eng = CollaborativeEngine(tiers=[Tier(edge_p, name="edge")],
+                              n2m=LinearN2M(1.0, 0.0), seed=0)
+    a = eng.submit(np.zeros(10, np.int32), now_s=0.0)
+    b = eng.submit(np.zeros(10, np.int32), now_s=0.0)
+    assert a.wait_s == 0.0
+    assert b.wait_s == pytest.approx(a.latency_s - a.wait_s)
+    assert b.latency_s > a.latency_s
+
+
+def test_engine_bounded_queue_reroutes():
+    fast = DeviceProfile("fast", LinearLatencyModel(0.0, 0.0, 10.0), 0.0)
+    slow = DeviceProfile("slow", LinearLatencyModel(0.0, 0.0, 20.0), 0.0)
+    eng = CollaborativeEngine(
+        tiers=[Tier(fast, name="fast", servers=1, queue_capacity=0),
+               Tier(slow, name="slow", servers=1)],
+        n2m=LinearN2M(1.0, 0.0), seed=0)
+    r1 = eng.submit(np.zeros(5, np.int32), now_s=0.0)   # takes the server
+    r2 = eng.submit(np.zeros(5, np.int32), now_s=0.0)   # queue full -> slow
+    assert r1.device == 0
+    assert r2.device == 1
+
+
+def test_engine_online_refit_corrects_bad_plane():
+    """Start the scheduler with a wildly wrong edge plane; after the refit
+    interval the observed completions pull it back to reality."""
+    edge_p = DeviceProfile("edge", LinearLatencyModel(1e-3, 2e-3, 0.01), 0.02)
+    wrong = DeviceProfile("edge", LinearLatencyModel(1.0, 1.0, 1.0), 0.02)
+    eng = CollaborativeEngine(
+        tiers=[Tier(dataclasses.replace(wrong, model=wrong.model))],
+        n2m=LinearN2M(1.0, 0.0), seed=0, refit_interval=64)
+    # ground truth executes on the REAL plane
+    eng.tiers[0].profile = edge_p
+    rng = np.random.default_rng(7)
+    for i in range(200):
+        eng.submit(np.zeros(int(rng.integers(2, 120)), np.int32),
+                   now_s=float(i))
+    refit = eng.scheduler.tiers[0].model
+    assert eng.calibrator.n_refits >= 2
+    assert refit.alpha_m == pytest.approx(2e-3, rel=0.5)
+    assert refit.beta < 0.1
+    # the tier's ground-truth profile object was never mutated
+    assert eng.tiers[0].profile.model.alpha_m == 2e-3

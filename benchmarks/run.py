@@ -6,7 +6,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
   fig3       — N->M regression quality per language pair
   predictors — beyond-paper estimator ablation (paper's future work)
   tiered     — beyond-paper: roofline-priced TPU tiers under C-NMT
-  multitier  — beyond-paper: 3-tier queue-aware DES under Poisson load
+  multitier  — beyond-paper: 3-tier queue-aware DES under Poisson load,
+               plus a batch-size x rate sweep with SLO-deadline shedding
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -48,6 +49,8 @@ def main() -> None:
 
     from benchmarks import multitier
     _, csv = multitier.run(n_requests=min(n_req, 20_000))
+    csv_all += csv
+    _, csv = multitier.run_batched(n_requests=min(n_req, 20_000))
     csv_all += csv
 
     from benchmarks import roofline

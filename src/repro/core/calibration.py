@@ -17,6 +17,11 @@ out from the 100k evaluation set.  Here:
 * :func:`device_from_roofline` prices an un-runnable target (a TPU v5e
   mesh) from dry-run cost analysis — beyond paper; used by the tiered
   serving engine.
+* :func:`measure_batched_seq2seq` + :func:`fit_batch_overhead` calibrate
+  the sub-linear batched-decode model  T(b) = T1 + o·(b−1)  that the
+  batched serving tiers use (beyond paper): the plane comes from the
+  single-sequence grid, the per-extra-sequence overhead ``o`` from a
+  batch-size sweep at fixed (N, M).
 * :class:`OnlineCalibrator` closes the loop at serve time (beyond paper):
   it accumulates observed (N, M_out, T_exe) completions per tier and
   periodically refits both the scheduler's per-tier planes and the
@@ -105,6 +110,57 @@ def fit_device(
 ) -> DeviceProfile:
     model = LinearLatencyModel().fit(n, m, t)
     return DeviceProfile(name=name, model=model, noise_frac=noise_frac)
+
+
+def measure_batched_seq2seq(
+    translate_batch: Callable[[np.ndarray, int], object],
+    batch_sizes: Sequence[int],
+    *,
+    n_len: int = 16,
+    m_len: int = 16,
+    reps: int = 2,
+    warmup: int = 1,
+    seed: int = 0,
+    vocab: int = 1000,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Time ``translate_batch(tokens_2d, forced_len)`` over a batch-size grid.
+
+    The single-sequence grid (:func:`measure_seq2seq_grid`) characterizes
+    the T_exe(N, M) plane; this sweep holds (N, M) fixed and varies only
+    the batch size b, measuring the *marginal* cost of each extra
+    sequence in a padded decode batch.  Returns (b, T_seconds) samples
+    for :func:`fit_batch_overhead`.
+    """
+    rng = np.random.default_rng(seed)
+    bs, ts = [], []
+    for b in batch_sizes:
+        tokens = rng.integers(1, vocab, size=(int(b), n_len), dtype=np.int32)
+        for r in range(warmup + reps):
+            t0 = time.perf_counter()
+            translate_batch(tokens, m_len)
+            dt = time.perf_counter() - t0
+            if r >= warmup:
+                bs.append(float(b))
+                ts.append(dt)
+    return np.asarray(bs), np.asarray(ts)
+
+
+def fit_batch_overhead(b: np.ndarray, t: np.ndarray) -> Tuple[float, float]:
+    """Fit the sub-linear batch latency model  T(b) = T1 + o * (b - 1).
+
+    Least-squares on (batch size, batch wall-clock) samples from
+    :func:`measure_batched_seq2seq`; returns ``(t_base_s,
+    per_seq_overhead_s)`` with the overhead clamped non-negative (same
+    physical constraint as the plane slopes).  ``per_seq_overhead_s``
+    plugs directly into ``SimTier`` / ``Tier`` / ``SchedTier``.
+    """
+    b = np.asarray(b, np.float64)
+    t = np.asarray(t, np.float64)
+    if b.size < 2 or np.ptp(b) == 0:
+        raise ValueError("need samples at >= 2 distinct batch sizes")
+    a = np.stack([np.ones_like(b), b - 1.0], axis=1)
+    coef, *_ = np.linalg.lstsq(a, t, rcond=None)
+    return float(coef[0]), float(max(coef[1], 0.0))
 
 
 def make_edge_cloud_pair(

@@ -30,8 +30,11 @@ Beyond paper
 
   Each :class:`SchedTier` carries its own latency plane and (for remote
   tiers) its own :class:`TxEstimator`; ``T_queue`` comes from the
-  caller's occupancy bookkeeping.  With exactly two tiers (local edge +
-  remote cloud) and empty queues this reduces *bit-for-bit* to
+  caller's occupancy bookkeeping, made batch-aware by
+  :meth:`MultiTierScheduler.queue_delay` when a tier serves requests in
+  length-bucketed batches (predicted backlog ÷ effective service rate).
+  With exactly two tiers (local edge + remote cloud), empty queues and
+  ``batch_size=1`` this reduces *bit-for-bit* to
   :meth:`CNMTScheduler.decide` — the paper's Eq. (1) is the N=2 special
   case, and the regression tests pin that equivalence.
 """
@@ -43,7 +46,11 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.latency_model import DeviceProfile, bytes_for_tokens
+from repro.core.latency_model import (
+    DeviceProfile,
+    LinearLatencyModel,
+    bytes_for_tokens,
+)
 from repro.core.length_regressor import LinearN2M, MeanN2M
 from repro.core.tx_estimator import TxEstimator
 
@@ -91,17 +98,23 @@ class CNMTScheduler(BaseScheduler):
             device = EDGE if t_e <= t_c_tot else CLOUD
         return Decision(device, t_e, t_c_tot, m_hat)
 
-    def decide_batch(self, n: np.ndarray, rtt: np.ndarray) -> np.ndarray:
+    def decide_batch(self, n: np.ndarray, rtt: np.ndarray,
+                     bandwidth_bps: float = 100e6) -> np.ndarray:
         """Vectorized Eq. (1) for the analytic simulator.
 
-        ``rtt`` is the scheduler's T_tx estimate (RTT + payload term added
-        here) per request.  Returns an int array of EDGE/CLOUD.
+        ``rtt`` is the scheduler's RTT estimate per request; the payload
+        serialization term is added here at ``bandwidth_bps``.  Both are
+        link properties, so they travel together as arguments (the
+        stateful paths read them from the TxEstimator instead — pass the
+        link's configured bandwidth, e.g. ``profile.bandwidth_bps``, to
+        stay consistent with them; the default is the paper's 100 Mbps).
+        Returns an int array of EDGE/CLOUD.
         """
         n = np.asarray(n, np.float64)
         m_hat = np.maximum(np.asarray(self.n2m.predict(n), np.float64), 1.0)
         t_e = np.asarray(self.edge.model.predict(n, m_hat), np.float64)
         payload = bytes_for_tokens(n + m_hat, self.bytes_per_token)
-        t_tx = np.asarray(rtt, np.float64) + payload * 8.0 / 100e6
+        t_tx = np.asarray(rtt, np.float64) + payload * 8.0 / bandwidth_bps
         t_c = np.asarray(self.cloud.model.predict(n, m_hat), np.float64) + t_tx
         gap = t_c - t_e
         dev = np.where(t_e <= t_c, EDGE, CLOUD)
@@ -126,11 +139,25 @@ class SchedTier:
     ``model`` is the T_exe,k(N, M) plane (measured, roofline-priced, or
     online-refit); ``tx`` is the tier's link estimator — ``None`` marks a
     local tier (no network hop, no T_tx term, lowest variance).
+
+    ``batch_size``/``per_seq_overhead_s`` describe the tier's believed
+    batched-service behaviour: each server drains up to ``batch_size``
+    queued requests per decode pass, a batch of b similar requests taking
+
+        T_batch = T_exe(max N, max M_hat) + per_seq_overhead_s * (b - 1)
+
+    (sub-linear in b; ``per_seq_overhead_s`` is calibratable from batched
+    timing grids, see ``repro.core.calibration.fit_batch_overhead``).
+    These feed the batch-aware T_queue term in
+    :meth:`MultiTierScheduler.queue_delay`; ``batch_size=1`` reduces to
+    the unbatched PR-1 behaviour exactly.
     """
 
     name: str
     model: LinearLatencyModel
     tx: Optional[TxEstimator] = None
+    batch_size: int = 1
+    per_seq_overhead_s: float = 0.0
 
     @property
     def is_local(self) -> bool:
@@ -187,6 +214,33 @@ class MultiTierScheduler(BaseScheduler):
 
     def m_hat(self, n: float) -> float:
         return max(float(np.asarray(self.n2m.predict(float(n)))), 1.0)
+
+    def queue_delay(self, k: int, backlog_s: float, in_system: int,
+                    servers: int) -> float:
+        """Batch-aware T_queue,k: predicted backlog ÷ effective service rate.
+
+        ``backlog_s`` is the sum of predicted per-sequence T_exe for the
+        ``in_system`` requests queued or running at tier k, ``servers``
+        its concurrency.  An unbatched tier drains one sequence per
+        server at a time, so T_queue = backlog / servers (PR-1 semantics,
+        bit-for-bit).  A tier with batch size b amortizes a decode pass
+        over up to b sequences: a batch costs roughly one mean sequence
+        time T1 plus ``per_seq_overhead_s`` per extra member, so the
+        effective work-drain speedup is  b·T1 / (T1 + o·(b−1))  and
+
+            T_queue = backlog / (servers * speedup).
+        """
+        backlog = float(backlog_s)
+        tier = self.tiers[k]
+        b = tier.batch_size
+        if b <= 1 or in_system <= 0 or backlog <= 0.0:
+            return backlog / servers
+        t1 = backlog / in_system
+        t_batch = t1 + tier.per_seq_overhead_s * (b - 1)
+        if t_batch <= 0.0:
+            return 0.0
+        speedup = b * t1 / t_batch
+        return backlog / (servers * speedup)
 
     # ----------------------------------------------------------- decisions --
     def decide(self, n: int, now_s: float,

@@ -31,6 +31,30 @@ observed completions every K requests.  At zero load (every completion
 before the next arrival, empty queues) the DES reproduces the analytic
 replay decision-for-decision on the same seed — the invariant tests pin
 it.
+
+Batched continuous serving: a tier with ``batch_size`` b > 1 drains its
+FIFO backlog in length-bucketed batches (via
+:class:`~repro.data.pipeline.TokenBatcher`): whenever one of its servers
+frees up it starts up to b queued requests together, the batch costing
+
+    T_batch = max_i T_exe,true(N_i, M_i) + per_seq_overhead_s * (b - 1)
+
+— one decode pass over the padded batch plus a per-extra-sequence
+overhead, the standard sub-linear continuous-batching model.  All batch
+members start and finish together.  ``batch_size=1`` takes the exact
+PR-1 single-request code path, so the zero-load DES≡analytic invariant
+is untouched.
+
+Deadline-aware admission (SLO): ``RequestStream.slo_s`` optionally
+attaches a relative deadline to each request (``inf`` = none).  A
+request whose preferred tier is full is re-routed to the cheapest tier
+with space whose *predicted completion* (now + T_queue + T_tx + T_exe)
+meets the deadline; if no tier can, the request is **shed** instead of
+force-enqueued, and requests whose deadline has already expired by the
+time a server would start them are shed at drain.  Requests without
+deadlines keep the PR-1 reroute/force-enqueue behaviour bit-for-bit.
+``DESResult.summary()`` reports SLO attainment, shed counts and
+sustained throughput alongside the latency percentiles.
 """
 
 from __future__ import annotations
@@ -53,6 +77,17 @@ from repro.core.scheduler import (
     StaticScheduler,
 )
 from repro.core.tx_estimator import TxEstimator
+from repro.data.pipeline import TokenBatcher
+
+
+def _as_slo_array(slo_s, k: int) -> Optional[np.ndarray]:
+    """Normalize a scalar/array SLO spec to a float64 array (inf = none)."""
+    if slo_s is None:
+        return None
+    arr = np.broadcast_to(np.asarray(slo_s, np.float64), (k,)).copy()
+    if np.any(arr <= 0):
+        raise ValueError("slo_s must be positive (use inf for no deadline)")
+    return arr
 
 
 @dataclasses.dataclass
@@ -63,18 +98,23 @@ class RequestStream:
     produces* (drives true compute time and response payload); ``m_real``
     is the ground-truth reference length (used only to fit gamma/delta,
     as in the paper: "computed on the ground-truth (N, M_real) pairs").
+    ``slo_s`` (beyond paper) optionally carries a per-request relative
+    deadline in seconds (``inf`` = no deadline); the DES sheds requests
+    it predicts cannot meet their deadline instead of queueing them.
     """
 
     t_arrival_s: np.ndarray
     n: np.ndarray
     m_out: np.ndarray
     m_real: np.ndarray
+    slo_s: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return int(self.n.size)
 
 
-def make_stream(n, m_out, m_real, *, duration_s: float, seed: int = 0) -> RequestStream:
+def make_stream(n, m_out, m_real, *, duration_s: float, seed: int = 0,
+                slo_s=None) -> RequestStream:
     """Spread requests over the trace window with arrival jitter."""
     rng = np.random.default_rng(seed)
     k = len(n)
@@ -85,13 +125,15 @@ def make_stream(n, m_out, m_real, *, duration_s: float, seed: int = 0) -> Reques
         n=np.asarray(n, np.float64),
         m_out=np.asarray(m_out, np.float64),
         m_real=np.asarray(m_real, np.float64),
+        slo_s=_as_slo_array(slo_s, k),
     )
 
 
 def make_poisson_stream(n, m_out, m_real, *, rate_hz: float,
-                        seed: int = 0) -> RequestStream:
+                        seed: int = 0, slo_s=None) -> RequestStream:
     """Poisson arrivals at ``rate_hz`` (exponential inter-arrival gaps) —
-    the load-sweep counterpart of :func:`make_stream`."""
+    the load-sweep counterpart of :func:`make_stream`.  ``slo_s`` (scalar
+    or per-request array) attaches relative deadlines."""
     if rate_hz <= 0:
         raise ValueError("rate_hz must be positive")
     rng = np.random.default_rng(seed)
@@ -101,6 +143,7 @@ def make_poisson_stream(n, m_out, m_real, *, rate_hz: float,
         n=np.asarray(n, np.float64),
         m_out=np.asarray(m_out, np.float64),
         m_real=np.asarray(m_real, np.float64),
+        slo_s=_as_slo_array(slo_s, len(n)),
     )
 
 
@@ -186,7 +229,8 @@ def _simulate_online(
     probe_interval_s: Optional[float],
 ) -> np.ndarray:
     """Sequential replay: the T_tx estimate is coupled to past decisions."""
-    est = tx_estimator or TxEstimator(init_rtt_s=float(profile.rtt_at(0.0)))
+    est = tx_estimator or TxEstimator(init_rtt_s=float(profile.rtt_at(0.0)),
+                                      bandwidth_bps=profile.bandwidth_bps)
     n_req = len(stream)
     dev = np.empty(n_req, dtype=np.int32)
     bpt = policy.bytes_per_token
@@ -269,10 +313,19 @@ class SimTier:
     """Ground truth for one tier in the discrete-event simulator.
 
     A bounded-FIFO multi-server station: ``servers`` concurrent requests
-    execute, up to ``queue_capacity`` more wait (None = unbounded), and a
-    request routed to a full tier is re-routed to the next-best tier with
-    space (counted in ``DESResult.overflow``).  ``link`` is the tier's
-    RTT trace; None marks the local tier (no T_tx, and no §II-C samples).
+    (or batches) execute, up to ``queue_capacity`` more wait (None =
+    unbounded), and a request routed to a full tier is re-routed to the
+    next-best tier with space (counted in ``DESResult.overflow``).
+    ``link`` is the tier's RTT trace; None marks the local tier (no T_tx,
+    and no §II-C samples).
+
+    ``batch_size`` > 1 turns each server into a continuous-batching
+    worker: when it frees up it drains up to ``batch_size`` queued
+    requests as one length-bucketed batch (a :class:`TokenBatcher` with
+    ``max_batch_tokens`` as its padded-token budget) whose true duration
+    is  max over members of the solo execution draw plus
+    ``per_seq_overhead_s`` per extra member — all members finish
+    together.  ``batch_size=1`` is the exact unbatched PR-1 station.
     """
 
     name: str
@@ -280,30 +333,46 @@ class SimTier:
     servers: int = 1
     queue_capacity: Optional[int] = None
     link: Optional[ConnectionProfile] = None
+    batch_size: int = 1
+    per_seq_overhead_s: float = 0.0
+    max_batch_tokens: Optional[int] = None
 
     def __post_init__(self):
         if self.servers < 1:
             raise ValueError("servers must be >= 1")
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if self.per_seq_overhead_s < 0:
+            raise ValueError("per_seq_overhead_s must be >= 0")
 
 
 @dataclasses.dataclass
 class DESResult:
     policy: str
     tier_names: List[str]
-    tier: np.ndarray          # per-request tier index
+    tier: np.ndarray          # per-request tier index (-1 = shed unadmitted)
     t_arrival_s: np.ndarray
     t_start_s: np.ndarray     # execution start (arrival + queue wait)
     t_finish_s: np.ndarray    # execution end
     wait_s: np.ndarray        # T_queue actually experienced
     tx_s: np.ndarray          # true T_tx (0 for local tiers)
-    exec_s: np.ndarray        # true T_exe
-    latency_s: np.ndarray     # wait + exec + tx
+    exec_s: np.ndarray        # true T_exe (batch duration for batched tiers)
+    latency_s: np.ndarray     # wait + exec + tx (NaN for shed requests)
     overflow: np.ndarray      # per-tier count of forced enqueues (all full)
+    shed: Optional[np.ndarray] = None   # per-request deadline-shed flags
+    slo_s: Optional[np.ndarray] = None  # relative deadlines (inf = none)
     events: Optional[List] = None   # (time, kind, req, tier) as processed
 
     @property
+    def served(self) -> np.ndarray:
+        """Boolean mask of requests that actually executed (not shed)."""
+        if self.shed is None:
+            return np.ones(len(self.tier), bool)
+        return ~self.shed
+
+    @property
     def total_s(self) -> float:
-        return float(self.latency_s.sum())
+        return float(self.latency_s[self.served].sum())
 
     def tier_frac(self) -> Dict[str, float]:
         r = max(len(self.tier), 1)
@@ -311,17 +380,48 @@ class DESResult:
                 for k, name in enumerate(self.tier_names)}
 
     def p95_latency_s(self) -> float:
-        return float(np.percentile(self.latency_s, 95))
+        return float(np.percentile(self.latency_s[self.served], 95))
+
+    def slo_attainment(self) -> float:
+        """Fraction of deadline-carrying requests that completed within
+        their deadline (shed requests count as missed); 1.0 when no
+        request carried a deadline (vacuously attained)."""
+        if self.slo_s is None:
+            return 1.0
+        has_dl = np.isfinite(self.slo_s)
+        if not has_dl.any():
+            return 1.0
+        met = self.served & np.where(
+            np.isnan(self.latency_s), False, self.latency_s <= self.slo_s)
+        return float(met[has_dl].sum() / has_dl.sum())
+
+    def throughput_rps(self) -> float:
+        """Served requests per second of makespan (sustained throughput)."""
+        served = self.served
+        if not served.any():
+            return 0.0
+        span = float(self.t_finish_s[served].max()
+                     - self.t_arrival_s.min())
+        return float(served.sum()) / span if span > 0 else float("inf")
 
     def summary(self) -> Dict[str, float]:
+        srv = self.served
+        lat = self.latency_s[srv]
+        wait = self.wait_s[srv]
+        if lat.size == 0:              # everything shed: no latency stats
+            lat = wait = np.array([np.nan])
         return {
             "requests": float(len(self.tier)),
-            "mean_latency_s": float(self.latency_s.mean()),
-            "p50_latency_s": float(np.percentile(self.latency_s, 50)),
-            "p95_latency_s": self.p95_latency_s(),
-            "mean_wait_s": float(self.wait_s.mean()),
-            "max_wait_s": float(self.wait_s.max()),
+            "served": float(srv.sum()),
+            "mean_latency_s": float(lat.mean()),
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "mean_wait_s": float(wait.mean()),
+            "max_wait_s": float(wait.max()),
             "overflow": float(self.overflow.sum()),
+            "shed": float(len(self.tier) - srv.sum()),
+            "slo_attainment": self.slo_attainment(),
+            "throughput_rps": self.throughput_rps(),
         }
 
 
@@ -341,15 +441,24 @@ def simulate_des(
     drawn vectorized with ``default_rng(seed + 1 + k)`` (tier 0 = edge,
     tier 1 = cloud reproduces ``_true_times`` exactly) and true T_tx
     comes from each tier's own trace at the request's arrival time.
+    Tiers with ``batch_size`` > 1 serve length-bucketed batches whose
+    duration is the max of the members' solo draws plus the per-sequence
+    overhead (see :class:`SimTier`).
 
-    The scheduler sees queues only through its predicted-backlog term
-    (sum of its own T_exe predictions for queued+running requests,
-    divided by the server count) and sees each link only through §II-C
-    timestamped samples that become available when an offloaded request
-    *completes*.  ``calibrator`` (optional) receives every completion and
-    refits the scheduler's planes + N->M regressor whenever its interval
-    elapses — pass scheduler-owned model copies, not the ground-truth
-    profiles.
+    The scheduler sees queues only through its batch-aware
+    :meth:`~repro.core.scheduler.MultiTierScheduler.queue_delay` term
+    (its own predicted backlog ÷ effective service rate) and sees each
+    link only through §II-C timestamped samples that become available —
+    and are timestamped — when an offloaded request *completes* (the RTT
+    value is the one the request actually experienced; completions
+    arriving out of order cannot rewind the estimator).  ``calibrator``
+    (optional) receives every completion and refits the scheduler's
+    planes + N->M regressor whenever its interval elapses — pass
+    scheduler-owned model copies, not the ground-truth profiles.
+
+    Requests carrying a finite ``stream.slo_s`` deadline are admitted
+    only where the predicted completion meets it, shed otherwise (see
+    module docstring); without deadlines admission is PR-1-exact.
     """
     k_tiers = len(tiers)
     if k_tiers != len(scheduler.tiers):
@@ -367,6 +476,12 @@ def simulate_des(
                else t.link.tx_time(stream.t_arrival_s, payload_true)
                for t in tiers]
 
+    # absolute deadlines (inf = none); None disables every deadline branch
+    deadline_abs = None
+    if stream.slo_s is not None and np.any(np.isfinite(stream.slo_s)):
+        deadline_abs = np.asarray(stream.t_arrival_s, np.float64) \
+            + np.asarray(stream.slo_s, np.float64)
+
     def m_hats_vec():
         return np.maximum(
             np.asarray(scheduler.n2m.predict(stream.n), np.float64), 1.0)
@@ -377,12 +492,20 @@ def simulate_des(
     busy = [0] * k_tiers
     queues: List[List[int]] = [[] for _ in range(k_tiers)]
     qhead = [0] * k_tiers                 # pop index (amortized O(1) FIFO)
+    batchers = [TokenBatcher(max_batch=t.batch_size,
+                             max_tokens_per_batch=t.max_batch_tokens
+                             if t.max_batch_tokens is not None else 1 << 40)
+                if t.batch_size > 1 else None
+                for t in tiers]
     pred_backlog = np.zeros(k_tiers)      # scheduler-predicted work in system
+    in_system = [0] * k_tiers             # admitted-but-unfinished count
     pred_exec = np.zeros(n_req)           # predicted T_exe at the chosen tier
 
     tier_of = np.full(n_req, -1, np.int32)
     t_start = np.zeros(n_req)
     t_finish = np.zeros(n_req)
+    exec_used = np.zeros(n_req)           # actual service duration
+    shed = np.zeros(n_req, bool)
     overflow = np.zeros(k_tiers, np.int64)
     events: Optional[List] = [] if collect_events else None
 
@@ -395,83 +518,164 @@ def simulate_des(
         nonlocal seq
         busy[k] += 1
         t_start[i] = now
+        exec_used[i] = float(true_exec[k][i])
         fin = now + float(true_exec[k][i])
         heapq.heappush(heap, (fin, seq, _FINISH, k))
         seq += 1
         finish_req[(fin, seq - 1)] = i
 
+    def start_batch(ids: List[int], k: int, now: float) -> None:
+        nonlocal seq
+        busy[k] += 1
+        dur = max(float(true_exec[k][i]) for i in ids) \
+            + tiers[k].per_seq_overhead_s * (len(ids) - 1)
+        for i in ids:
+            t_start[i] = now
+            exec_used[i] = dur
+        fin = now + dur
+        heapq.heappush(heap, (fin, seq, _FINISH, k))
+        seq += 1
+        finish_req[(fin, seq - 1)] = tuple(ids)
+
     finish_req: Dict = {}
 
+    def shed_request(i: int, k: int, now: float, admitted: bool) -> None:
+        """Deadline miss: drop ``i`` (predicted or certain to miss)."""
+        shed[i] = True
+        if admitted:                       # leaving the tier's backlog
+            pred_backlog[k] = max(pred_backlog[k] - pred_exec[i], 0.0)
+            in_system[k] -= 1
+        if events is not None:
+            events.append((now, "shed", i, k))
+
     def waiting(k: int) -> int:
+        if batchers[k] is not None:
+            return len(batchers[k])
         return len(queues[k]) - qhead[k]
 
     def has_space(k: int) -> bool:
         cap = tiers[k].queue_capacity
         return cap is None or waiting(k) < cap or busy[k] < tiers[k].servers
 
+    def drain(k: int, now: float) -> None:
+        """Fill freed servers of tier k from its waiting line, shedding
+        queued requests whose deadline already expired (they would
+        certainly miss; dropping them protects the rest)."""
+        if batchers[k] is not None:
+            while busy[k] < tiers[k].servers and len(batchers[k]) > 0:
+                ids, _ = batchers[k].next_batch_ids()
+                if deadline_abs is not None:
+                    live = [i for i in ids if deadline_abs[i] >= now]
+                    for i in ids:
+                        if deadline_abs[i] < now:
+                            shed_request(i, k, now, admitted=True)
+                    ids = live
+                if ids:
+                    start_batch(ids, k, now)
+        else:
+            while busy[k] < tiers[k].servers and waiting(k) > 0:
+                j = queues[k][qhead[k]]
+                qhead[k] += 1
+                if qhead[k] > 1024 and qhead[k] * 2 > len(queues[k]):
+                    queues[k] = queues[k][qhead[k]:]
+                    qhead[k] = 0
+                if deadline_abs is not None and deadline_abs[j] < now:
+                    shed_request(j, k, now, admitted=True)
+                    continue
+                start(j, k, now)
+
     while heap:
         now, sq, kind, k_fin = heapq.heappop(heap)
         if kind == _ARRIVAL:
             i = sq
-            qd = [float(pred_backlog[k]) / tiers[k].servers
+            qd = [scheduler.queue_delay(k, pred_backlog[k], in_system[k],
+                                        tiers[k].servers)
                   for k in range(k_tiers)]
             d = scheduler.decide_fast(float(stream.n[i]), float(m_hats[i]),
                                       now, qd)
             k = d.tier
             if not has_space(k):
                 ranked = sorted(range(k_tiers), key=lambda j: d.t_pred[j])
-                for j in ranked:
-                    if has_space(j):
-                        k = j
-                        break
+                dl = None if deadline_abs is None else float(deadline_abs[i])
+                if dl is None or not np.isfinite(dl):
+                    # PR-1 semantics: next-best tier with space, else force
+                    for j in ranked:
+                        if has_space(j):
+                            k = j
+                            break
+                    else:
+                        overflow[k] += 1  # everything full: force-enqueue
                 else:
-                    overflow[k] += 1      # everything full: force-enqueue
+                    # deadline-aware: cheapest tier with space whose
+                    # predicted completion meets the deadline; else shed
+                    # (force-enqueue only if the preferred full tier is
+                    # still predicted to make it).
+                    spaced = [j for j in ranked if has_space(j)]
+                    feasible = [j for j in spaced
+                                if now + d.t_pred[j] <= dl]
+                    if feasible:
+                        k = feasible[0]
+                    elif not spaced and now + d.t_pred[k] <= dl:
+                        overflow[k] += 1
+                    else:
+                        shed_request(i, k, now, admitted=False)
+                        continue
             tier_of[i] = k
             pe = (scheduler.tiers[k].model.alpha_n * float(stream.n[i])
                   + scheduler.tiers[k].model.alpha_m * float(m_hats[i])
                   + scheduler.tiers[k].model.beta)
             pred_exec[i] = max(pe, 0.0)
             pred_backlog[k] += pred_exec[i]
+            in_system[k] += 1
             if events is not None:
                 events.append((now, "arrival", i, k))
             if busy[k] < tiers[k].servers:
-                start(i, k, now)
+                if batchers[k] is not None:
+                    start_batch([i], k, now)
+                else:
+                    start(i, k, now)
+            elif batchers[k] is not None:
+                batchers[k].add(i, length=int(stream.n[i]))
             else:
                 queues[k].append(i)
         else:
-            i = finish_req.pop((now, sq))
+            done = finish_req.pop((now, sq))
+            members = done if isinstance(done, tuple) else (done,)
             k = k_fin
             busy[k] -= 1
-            t_finish[i] = now
-            pred_backlog[k] = max(pred_backlog[k] - pred_exec[i], 0.0)
-            if events is not None:
-                events.append((now, "finish", i, k))
-            arr = float(stream.t_arrival_s[i])
-            if tiers[k].link is not None:
-                # §II-C: the response carries timestamps -> RTT sample for
-                # this tier's link, available only now that it completed.
-                scheduler.observe_rtt(k, arr, float(tiers[k].link.rtt_at(arr)))
-            if calibrator is not None:
-                due = calibrator.record(k, float(stream.n[i]),
-                                        float(stream.m_out[i]),
-                                        float(true_exec[k][i]))
-                if due:
-                    calibrator.refit([t.model for t in scheduler.tiers],
-                                     scheduler.n2m)
-                    m_hats = m_hats_vec()
-            if waiting(k) > 0:
-                j = queues[k][qhead[k]]
-                qhead[k] += 1
-                if qhead[k] > 1024 and qhead[k] * 2 > len(queues[k]):
-                    queues[k] = queues[k][qhead[k]:]
-                    qhead[k] = 0
-                start(j, k, now)
+            for i in members:
+                t_finish[i] = now
+                pred_backlog[k] = max(pred_backlog[k] - pred_exec[i], 0.0)
+                in_system[k] -= 1
+                if events is not None:
+                    events.append((now, "finish", i, k))
+                arr = float(stream.t_arrival_s[i])
+                if tiers[k].link is not None:
+                    # §II-C: the response carries timestamps -> RTT sample
+                    # for this tier's link.  The RTT *value* is the one the
+                    # request experienced (trace at its arrival); the sample
+                    # is timestamped `now`, when the response came back —
+                    # timestamping it at arrival let out-of-order
+                    # completions rewind the estimator's clock.
+                    scheduler.observe_rtt(k, now,
+                                          float(tiers[k].link.rtt_at(arr)))
+                if calibrator is not None:
+                    due = calibrator.record(k, float(stream.n[i]),
+                                            float(stream.m_out[i]),
+                                            float(true_exec[k][i]))
+                    if due:
+                        calibrator.refit([t.model for t in scheduler.tiers],
+                                         scheduler.n2m)
+                        m_hats = m_hats_vec()
+            drain(k, now)
 
-    wait = t_start - stream.t_arrival_s
     rows = np.arange(n_req)
-    exec_s = np.stack(true_exec)[tier_of, rows]
-    tx_s = np.stack(true_tx)[tier_of, rows]
-    latency = wait + exec_s + tx_s
+    ok = ~shed & (tier_of >= 0)
+    safe_tier = np.where(tier_of >= 0, tier_of, 0)
+    tx_s = np.where(ok, np.stack(true_tx)[safe_tier, rows], 0.0)
+    exec_s = np.where(ok, exec_used, 0.0)
+    wait = np.where(ok, t_start - stream.t_arrival_s, 0.0)
+    latency = np.where(ok, wait + exec_s + tx_s, np.nan)
     return DESResult(
         policy=scheduler.name,
         tier_names=[t.name for t in tiers],
@@ -484,5 +688,8 @@ def simulate_des(
         exec_s=exec_s,
         latency_s=latency,
         overflow=overflow,
+        shed=shed,
+        slo_s=None if stream.slo_s is None
+        else np.asarray(stream.slo_s, np.float64),
         events=events,
     )

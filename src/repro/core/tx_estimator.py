@@ -20,6 +20,13 @@ A staleness guard (beyond paper): if no sample arrived for
 modelling the gateway pinging the server — so decisions never rely on an
 arbitrarily old estimate.  The simulator can disable probing to reproduce
 the paper-faithful behaviour exactly.
+
+Causal ordering: responses from concurrently offloaded requests can
+return out of order (a short request issued later completes before a
+long one issued earlier).  ``observe`` drops any sample timestamped
+before the newest one already ingested (counted in ``n_stale``), so the
+EWMA only ever moves forward in time and ``_last_update`` — which gates
+the staleness probe — never runs backwards.
 """
 
 from __future__ import annotations
@@ -43,12 +50,21 @@ class TxEstimator:
         self._last_update: Optional[float] = None
         self.n_samples = 0
         self.n_probes = 0
+        self.n_stale = 0
 
     # -- ingestion ---------------------------------------------------------
     def observe(self, timestamp_s: float, rtt_s: float) -> None:
-        """Record a timestamped RTT measurement from an offloaded request."""
+        """Record a timestamped RTT measurement from an offloaded request.
+
+        Samples older than the newest already ingested are dropped (see
+        module docstring): out-of-order completions must not rewind the
+        estimator's notion of "now".
+        """
         if rtt_s <= 0:
             raise ValueError("rtt must be positive")
+        if self._last_update is not None and timestamp_s < self._last_update:
+            self.n_stale += 1
+            return
         if self.mode == "last" or self._last_update is None:
             self._estimate = rtt_s if self.mode == "last" else (
                 rtt_s if self.n_samples == 0

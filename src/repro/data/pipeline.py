@@ -7,14 +7,16 @@
   tgt_out, tgt_mask) with BOS/EOS handling.
 * :func:`lm_batches` — decoder-only LM batches (tokens, targets) used by
   the big-model training driver.
-* :class:`TokenBatcher` — stateful round-robin batcher used by the serving
-  engine to group concurrent requests of similar length.
+* :class:`TokenBatcher` — stateful length-bucketing batcher used by the
+  serving engine (real padded token batches) and the discrete-event
+  simulator (length-only requests) to group concurrent requests of
+  similar length into sub-linear-cost decode batches.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -100,38 +102,68 @@ def lm_batches(
 
 @dataclasses.dataclass
 class TokenBatcher:
-    """Greedy length-aware batcher for the serving engine.
+    """Greedy length-aware batcher for the serving engine and simulator.
 
     Collects pending requests and emits batches whose padded token count
     stays under ``max_tokens_per_batch`` — the standard continuous-batching
-    admission rule.
+    admission rule.  Requests can carry real token arrays (serving: the
+    batch is emitted padded, ready for a batched decode) or just a length
+    (discrete-event simulation: only the bucketing decision matters) —
+    :meth:`next_batch_ids` serves both, :meth:`next_batch` requires
+    tokens.
     """
 
     max_batch: int = 32
     max_tokens_per_batch: int = 8192
 
     def __post_init__(self):
-        self._pending: List[Tuple[int, np.ndarray]] = []
+        # (req_id, tokens-or-None, length), kept sorted lazily by length
+        self._pending: List[Tuple[int, Optional[np.ndarray], int]] = []
 
-    def add(self, req_id: int, tokens: np.ndarray) -> None:
-        self._pending.append((req_id, np.asarray(tokens, np.int32)))
+    def add(self, req_id: int, tokens: Optional[np.ndarray] = None, *,
+            length: Optional[int] = None) -> None:
+        if tokens is not None:
+            arr = np.asarray(tokens, np.int32)
+            self._pending.append((req_id, arr, len(arr)))
+        elif length is not None:
+            self._pending.append((req_id, None, int(length)))
+        else:
+            raise ValueError("pass tokens or length")
 
     def __len__(self) -> int:
         return len(self._pending)
 
-    def next_batch(self) -> Tuple[List[int], np.ndarray] | None:
-        if not self._pending:
-            return None
+    def _take(self) -> List[Tuple[int, Optional[np.ndarray], int]]:
+        """Pop the next length-bucketed batch off the pending list."""
         # sort by length so one batch pads minimally
-        self._pending.sort(key=lambda kv: len(kv[1]))
-        take: List[Tuple[int, np.ndarray]] = []
+        self._pending.sort(key=lambda kv: kv[2])
+        take: List[Tuple[int, Optional[np.ndarray], int]] = []
         width = 0
         while self._pending and len(take) < self.max_batch:
             cand = self._pending[0]
-            w = max(width, len(cand[1]))
+            w = max(width, cand[2])
             if take and w * (len(take) + 1) > self.max_tokens_per_batch:
                 break
             take.append(self._pending.pop(0))
             width = w
-        ids = [r for r, _ in take]
-        return ids, _pad_to([t for _, t in take], width)
+        return take
+
+    def next_batch_ids(self) -> Tuple[List[int], int] | None:
+        """(request ids, padded width) of the next batch; None when empty.
+
+        Works for length-only requests — the discrete-event simulator's
+        drain path, where no real token arrays exist.
+        """
+        if not self._pending:
+            return None
+        take = self._take()
+        return [r for r, _, _ in take], max(L for _, _, L in take)
+
+    def next_batch(self) -> Tuple[List[int], np.ndarray] | None:
+        """(request ids, padded (b, width) token batch); None when empty."""
+        if not self._pending:
+            return None
+        take = self._take()
+        width = max(L for _, _, L in take)
+        ids = [r for r, _, _ in take]
+        return ids, _pad_to([t for _, t, _ in take], width)

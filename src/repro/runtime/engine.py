@@ -27,12 +27,28 @@ this reduces exactly to paper Eq. (1)/(2); the regression tests pin the
 reduction bit-for-bit against the seed engine semantics.  An optional
 online-feedback loop (``refit_interval``) refits the scheduler's planes
 and the N->M regressor from observed completions every K requests.
+
+Batched continuous serving (beyond paper): a tier with ``batch_size``
+b > 1 coalesces requests in virtual time — while a server is busy,
+arrivals assigned to it accumulate into the next not-yet-started batch
+(up to b members) and start together when the server frees; a batch of
+b costs  max member execution + ``per_seq_overhead_s``·(b−1)  (the
+sub-linear continuous-batching model, same formula as the DES).  A
+member's reported latency reflects the batch state at its own admission;
+``batch_size=1`` keeps the exact unbatched virtual-time bookkeeping.
+
+Deadline-aware admission (SLO): ``submit(..., deadline_s=...)`` attaches
+a relative deadline.  When the chosen tier is full the engine re-routes
+to the cheapest tier with space whose predicted total meets the
+deadline, and **sheds** the request (``RequestResult.shed``) when no
+tier can — instead of the blind force-enqueue used for deadline-less
+requests.  ``stats()`` reports SLO attainment and shed counts alongside
+the latency percentiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -55,9 +71,18 @@ class Tier:
 
     ``rtt_fn(now) -> rtt_seconds`` marks a REMOTE tier (a ConnectionProfile's
     ``rtt_at`` in experiments; a real prober in deployment); None marks a
-    local tier.  ``servers`` bounds concurrent executions; up to
-    ``queue_capacity`` further requests wait in FIFO order (None =
+    local tier.  ``servers`` bounds concurrent executions (batches); up
+    to ``queue_capacity`` further requests wait in FIFO order (None =
     unbounded).
+
+    ``batch_size`` > 1 makes each server a continuous-batching worker:
+    queued requests coalesce (in virtual time) into batches of up to
+    ``batch_size`` that start together when the server frees, a batch of
+    b costing  max member exec + ``per_seq_overhead_s``·(b−1).  The
+    overhead is calibratable from batched timing grids
+    (``repro.core.calibration.fit_batch_overhead``); real ``executor``
+    calls still run per sequence — only the occupancy/latency accounting
+    is batch-aware.
     """
 
     profile: DeviceProfile
@@ -67,12 +92,16 @@ class Tier:
     servers: int = 1
     queue_capacity: Optional[int] = None
     bandwidth_bps: float = 100e6
+    batch_size: int = 1
+    per_seq_overhead_s: float = 0.0
 
     def __post_init__(self):
         if self.name is None:
             self.name = self.profile.name
         if self.servers < 1:
             raise ValueError("servers must be >= 1")
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
 
     def run(self, tokens: np.ndarray, m_hat: float,
             rng: np.random.Generator) -> tuple[int, float]:
@@ -89,47 +118,93 @@ class Tier:
 class _TierOccupancy:
     """Virtual-time FIFO bookkeeping for one tier: ``free_at`` holds each
     server's next-free time; assigned-but-not-started requests count
-    against the bounded queue."""
+    against the bounded queue.
 
-    def __init__(self, servers: int):
-        self.free_at = [0.0] * servers      # heap
+    With ``batch_size`` > 1 each server coalesces assignments: the last
+    batch scheduled on a server stays *open* while its start time is
+    still in the future, and new assignments join it (extending its
+    finish by the max-exec/overhead rule) instead of queueing behind it.
+    A joining member's reported service time is the batch duration as of
+    its join — earlier members keep the (shorter) duration they saw,
+    a deliberately causal per-request accounting.
+    """
+
+    def __init__(self, servers: int, batch_size: int = 1,
+                 per_seq_overhead_s: float = 0.0):
+        self.free_at = [0.0] * servers      # per-server next-free time
+        self.batch_size = batch_size
+        self.per_seq = per_seq_overhead_s
+        # per-server open tail batch: [start, base_exec_max, count]
+        self._tail: List[Optional[list]] = [None] * servers
         self.inflight: List[tuple] = []     # (start, finish), pruned lazily
 
     def _prune(self, now: float) -> None:
         self.inflight = [(s, f) for s, f in self.inflight if f > now]
 
     def queue_delay(self, now: float) -> float:
-        d = self.free_at[0] - now
+        d = min(self.free_at) - now
         return d if d > 0.0 else 0.0
 
     def queue_len(self, now: float) -> int:
         self._prune(now)
         return sum(1 for s, _ in self.inflight if s > now)
 
-    def assign(self, now: float, exec_s: float) -> float:
-        """FIFO-assign one request; returns its wait (T_queue)."""
+    def assign(self, now: float, exec_s: float) -> tuple[float, float]:
+        """FIFO-assign one request; returns (wait, service_s) — the
+        T_queue it experiences and the duration of the service (solo
+        exec, or its batch's duration as of joining)."""
         self._prune(now)                 # keep inflight bounded over time
-        earliest = heapq.heappop(self.free_at)
+        if self.batch_size > 1:
+            open_idx = [s for s, t in enumerate(self._tail)
+                        if t is not None and t[0] > now
+                        and t[2] < self.batch_size]
+            if open_idx:
+                s = min(open_idx, key=lambda j: self._tail[j][0])
+                tail = self._tail[s]
+                tail[1] = max(tail[1], exec_s)
+                tail[2] += 1
+                service = tail[1] + self.per_seq * (tail[2] - 1)
+                finish = tail[0] + service
+                self.free_at[s] = finish
+                self.inflight.append((tail[0], finish))
+                return tail[0] - now, service
+        idx = min(range(len(self.free_at)), key=self.free_at.__getitem__)
+        earliest = self.free_at[idx]
         wait = earliest - now
         if wait <= 0.0:
             wait = 0.0
         start = now + wait
         finish = start + exec_s
-        heapq.heappush(self.free_at, finish)
+        self.free_at[idx] = finish
+        if self.batch_size > 1:
+            # a future-start batch stays open for joins; a batch that
+            # started immediately is already running and cannot be joined
+            self._tail[idx] = [start, exec_s, 1] if start > now else None
         self.inflight.append((start, finish))
-        return wait
+        return wait, exec_s
 
 
 @dataclasses.dataclass
 class RequestResult:
     req_id: int
-    device: int           # tier index (EDGE/CLOUD for the 2-tier config)
+    device: int           # tier index (EDGE/CLOUD for the 2-tier config);
+                          # -1 when the request was shed
     n: int
     m_out: int
-    latency_s: float      # queue wait + execution + (tx if offloaded)
+    latency_s: float      # queue wait + execution + (tx if offloaded);
+                          # NaN when shed
     decision: MultiTierDecision
     wait_s: float = 0.0
     tier_name: str = ""
+    deadline_s: Optional[float] = None   # relative SLO, None = no deadline
+    shed: bool = False    # dropped by deadline-aware admission control
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        """True/False for deadline-carrying requests, None otherwise."""
+        if self.deadline_s is None:
+            return None
+        return (not self.shed) and self.latency_s <= self.deadline_s
 
 
 class CollaborativeEngine:
@@ -178,7 +253,9 @@ class CollaborativeEngine:
             if t.rtt_fn is not None:
                 tx = TxEstimator(init_rtt_s=float(t.rtt_fn(0.0)),
                                  bandwidth_bps=t.bandwidth_bps)
-            sched_tiers.append(SchedTier(t.name, model, tx))
+            sched_tiers.append(SchedTier(
+                t.name, model, tx, batch_size=t.batch_size,
+                per_seq_overhead_s=t.per_seq_overhead_s))
         n2m_model = dataclasses.replace(n2m) if refit_interval is not None \
             else n2m
         self.scheduler = MultiTierScheduler(
@@ -187,10 +264,13 @@ class CollaborativeEngine:
         self.calibrator = None if refit_interval is None else \
             OnlineCalibrator(len(self.tiers), interval=refit_interval)
 
-        self._occ = [_TierOccupancy(t.servers) for t in self.tiers]
+        self._occ = [_TierOccupancy(t.servers, t.batch_size,
+                                    t.per_seq_overhead_s)
+                     for t in self.tiers]
         self.rng = np.random.default_rng(seed)
         self.results: List[RequestResult] = []
         self.rejected = np.zeros(len(self.tiers), np.int64)
+        self.shed_count = np.zeros(len(self.tiers), np.int64)
         self._t0 = time.perf_counter()
         self._next_id = 0
 
@@ -215,30 +295,49 @@ class CollaborativeEngine:
         return time.perf_counter() - self._t0
 
     # ------------------------------------------------------------- submit --
-    def submit(self, tokens: np.ndarray, *, now_s: Optional[float] = None
-               ) -> RequestResult:
+    def submit(self, tokens: np.ndarray, *, now_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> RequestResult:
+        """Route and (virtually) serve one request.
+
+        ``deadline_s`` is a relative SLO: the deadline-aware admission
+        path may shed the request (returned with ``shed=True`` and NaN
+        latency) when no tier is predicted to meet it.
+        """
         now = self._now() if now_s is None else now_s
         n = int(len(tokens))
         qd = [occ.queue_delay(now) for occ in self._occ]
         d = self.scheduler.decide(n, now, qd)
-        k = self._admit(d, now)
+        k = self._admit(d, now, deadline_s)
+        if k < 0:                       # shed: never enters any queue
+            res = RequestResult(self._next_id, -1, n, 0, float("nan"), d,
+                                deadline_s=deadline_s, shed=True)
+            self._next_id += 1
+            self.results.append(res)
+            return res
         tier = self.tiers[k]
 
         m_out, exec_s = tier.run(tokens, d.m_hat, self.rng)
-        wait = self._occ[k].assign(now, exec_s)
+        wait, service_s = self._occ[k].assign(now, exec_s)
         if tier.rtt_fn is not None:
             rtt = float(tier.rtt_fn(now))
             payload = float(bytes_for_tokens(
                 n + m_out, self.scheduler.bytes_per_token))
             tx = self.scheduler.tiers[k].tx
-            net = exec_s + rtt + payload * 8.0 / tx.bandwidth_bps
-            tx.observe(now, rtt)       # §II-C timestamp mechanism, per link
+            net = service_s + rtt + payload * 8.0 / tx.bandwidth_bps
+            # §II-C timestamp mechanism, per link.  Stamped with the
+            # submit clock (monotone across calls): this synchronous
+            # engine ingests the sample when it resolves the request, and
+            # a completion-time stamp would let one long request park the
+            # estimator's clock in the virtual future, making the stale
+            # guard drop every faster request's sample until then.
+            tx.observe(now, rtt)
         else:
-            net = exec_s
+            net = service_s
         latency = wait + net
 
         res = RequestResult(self._next_id, k, n, m_out, latency, d,
-                            wait_s=wait, tier_name=tier.name)
+                            wait_s=wait, tier_name=tier.name,
+                            deadline_s=deadline_s)
         self._next_id += 1
         self.results.append(res)
         if self.calibrator is not None:
@@ -248,18 +347,33 @@ class CollaborativeEngine:
                     self.scheduler.n2m)
         return res
 
-    def _admit(self, d: MultiTierDecision, now: float) -> int:
+    def _admit(self, d: MultiTierDecision, now: float,
+               deadline_s: Optional[float] = None) -> int:
         """Bounded-FIFO admission: re-route from a full tier to the
         next-best tier with space; if everything is full, keep the choice
-        and count the rejection."""
+        and count the rejection.  Deadline-carrying requests re-route
+        only to tiers predicted to meet the deadline and are shed
+        (returns -1) when none can — predicted-completion-vs-deadline
+        instead of blind force-enqueue."""
         k = d.tier
         if self._has_space(k, now):
             return k
-        for j in sorted(range(len(self.tiers)), key=lambda j: d.t_pred[j]):
-            if self._has_space(j, now):
-                return j
-        self.rejected[k] += 1
-        return k
+        ranked = sorted(range(len(self.tiers)), key=lambda j: d.t_pred[j])
+        if deadline_s is None:
+            for j in ranked:
+                if self._has_space(j, now):
+                    return j
+            self.rejected[k] += 1
+            return k
+        spaced = [j for j in ranked if self._has_space(j, now)]
+        feasible = [j for j in spaced if d.t_pred[j] <= deadline_s]
+        if feasible:
+            return feasible[0]
+        if not spaced and d.t_pred[k] <= deadline_s:
+            self.rejected[k] += 1       # full everywhere but still on time
+            return k
+        self.shed_count[k] += 1
+        return -1
 
     def _has_space(self, k: int, now: float) -> bool:
         cap = self.tiers[k].queue_capacity
@@ -269,11 +383,24 @@ class CollaborativeEngine:
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> Dict[str, object]:
+        """Aggregate serving stats.  Latency percentiles and routing
+        fractions are over *served* requests; ``shed`` counts the
+        deadline-dropped ones and ``slo_attainment`` is the fraction of
+        deadline-carrying requests that completed within their deadline
+        (1.0 when none carried a deadline)."""
         if not self.results:
             return {}
-        lat = np.array([r.latency_s for r in self.results])
-        wait = np.array([r.wait_s for r in self.results])
-        dev = np.array([r.device for r in self.results])
+        served = [r for r in self.results if not r.shed]
+        n_shed = len(self.results) - len(served)
+        with_dl = [r for r in self.results if r.deadline_s is not None]
+        slo = 1.0 if not with_dl else \
+            float(sum(bool(r.slo_met) for r in with_dl)) / len(with_dl)
+        if not served:
+            return {"requests": len(self.results), "shed": n_shed,
+                    "slo_attainment": slo}
+        lat = np.array([r.latency_s for r in served])
+        wait = np.array([r.wait_s for r in served])
+        dev = np.array([r.device for r in served])
         remote = np.array([t.rtt_fn is not None for t in self.tiers])
         tx = self.tx
         return {
@@ -287,5 +414,7 @@ class CollaborativeEngine:
             "tier_frac": {t.name: float(np.mean(dev == k))
                           for k, t in enumerate(self.tiers)},
             "rejected": int(self.rejected.sum()),
+            "shed": n_shed,
+            "slo_attainment": slo,
             "tx_estimate_s": 0.0 if tx is None else tx.rtt(0.0),
         }

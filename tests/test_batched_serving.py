@@ -1,0 +1,342 @@
+"""Batched continuous-serving + deadline-aware admission (PR 2).
+
+Covers: the sub-linear batch latency model in the DES and the engine,
+batch-aware T_queue, SLO shedding / drain-time eviction, and the
+``batch_size=1`` / no-deadline bit-for-bit reduction to the PR 1
+semantics (the paper's Eq. (1) stays the degenerate case).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import make_profile
+from repro.core.scheduler import CNMTScheduler, MultiTierScheduler, SchedTier
+from repro.core.simulator import (
+    RequestStream,
+    SimTier,
+    make_poisson_stream,
+    simulate,
+    simulate_des,
+)
+from repro.core.tx_estimator import TxEstimator
+from repro.runtime.engine import CollaborativeEngine, Tier
+
+
+def _flat_profile(beta: float, name: str = "t") -> DeviceProfile:
+    """Length-independent deterministic service time (noise-free)."""
+    return DeviceProfile(name, LinearLatencyModel(0.0, 0.0, beta), 0.0)
+
+
+def _solo_sched(profile: DeviceProfile, *, batch_size: int = 1,
+                per_seq_overhead_s: float = 0.0) -> MultiTierScheduler:
+    return MultiTierScheduler(
+        [SchedTier(profile.name, dataclasses.replace(profile.model), None,
+                   batch_size=batch_size,
+                   per_seq_overhead_s=per_seq_overhead_s)],
+        LinearN2M(1.0, 0.0))
+
+
+def _stream(arrivals, n=8.0, slo_s=None) -> RequestStream:
+    arrivals = np.asarray(arrivals, np.float64)
+    k = len(arrivals)
+    n = np.broadcast_to(np.asarray(n, np.float64), (k,)).copy()
+    return RequestStream(arrivals, n, n, n,
+                         slo_s=None if slo_s is None
+                         else np.asarray(slo_s, np.float64))
+
+
+# --------------------------------------------- batch_size=1 reduction ------
+def test_batch1_no_deadline_zero_load_matches_analytic_bitwise():
+    """The acceptance invariant: tiers built through the *batched* code
+    path with batch_size=1 and no deadlines must still reproduce the
+    paper-faithful analytic replay decision- and latency-exact."""
+    edge = DeviceProfile("e", LinearLatencyModel(1.5e-4, 6e-4, 0.008), 0.03)
+    cloud = DeviceProfile("c", LinearLatencyModel(3e-5, 1.2e-4, 0.0016), 0.03)
+    n2m = LinearN2M(0.9, 2.0)
+    profile = make_profile("cp2", seed=0)
+    rng = np.random.default_rng(1)
+    k = 1500
+    n = rng.integers(2, 200, k).astype(np.float64)
+    m = np.maximum(0.9 * n + rng.normal(0, 3, k), 1.0)
+    stream = RequestStream(t_arrival_s=np.arange(k) * 1.0,
+                           n=n, m_out=m, m_real=m)
+
+    analytic = simulate(CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m),
+                        stream, profile, edge, cloud, seed=0)
+    multi = MultiTierScheduler(
+        [SchedTier("e", edge.model, None, batch_size=1,
+                   per_seq_overhead_s=0.0),
+         SchedTier("c", cloud.model,
+                   TxEstimator(init_rtt_s=float(profile.rtt_at(0.0))),
+                   batch_size=1, per_seq_overhead_s=0.0)],
+        n2m)
+    des = simulate_des(
+        multi, stream,
+        [SimTier("e", edge, batch_size=1, per_seq_overhead_s=0.0),
+         SimTier("c", cloud, link=profile, batch_size=1,
+                 per_seq_overhead_s=0.0)],
+        seed=0)
+    assert des.wait_s.max() == 0.0
+    assert np.array_equal(analytic.device, des.tier)
+    assert np.array_equal(analytic.latency_s, des.latency_s)
+    assert des.summary()["shed"] == 0.0
+    assert des.summary()["slo_attainment"] == 1.0
+
+
+def test_infinite_deadlines_equal_no_deadlines_loaded():
+    """slo_s = inf everywhere must take the exact no-deadline path even
+    under load (deadline machinery fully disabled)."""
+    prof = _flat_profile(0.05)
+    rng = np.random.default_rng(3)
+    arr = np.cumsum(rng.exponential(0.02, 400))
+    a = simulate_des(_solo_sched(prof), _stream(arr),
+                     [SimTier("t", prof, servers=2)], seed=0)
+    b = simulate_des(_solo_sched(prof),
+                     _stream(arr, slo_s=np.full(400, np.inf)),
+                     [SimTier("t", prof, servers=2)], seed=0)
+    assert np.array_equal(a.tier, b.tier)
+    assert np.array_equal(a.latency_s, b.latency_s)
+    assert b.summary()["slo_attainment"] == 1.0
+
+
+# --------------------------------------------------- DES batch formula -----
+def test_batch_members_share_start_finish_and_cost_formula():
+    """r0 runs solo; r1..r3 queue behind it and must start together as
+    one batch costing  max(solo) + per_seq_overhead * (b-1)."""
+    prof = _flat_profile(0.1)
+    tiers = [SimTier("t", prof, servers=1, batch_size=3,
+                     per_seq_overhead_s=0.01)]
+    r = simulate_des(_solo_sched(prof, batch_size=3,
+                                 per_seq_overhead_s=0.01),
+                     _stream([0.0, 0.01, 0.02, 0.03]), tiers, seed=0)
+    assert r.t_start_s[0] == 0.0
+    assert r.t_finish_s[0] == pytest.approx(0.1)
+    # the three queued requests form one batch at the first finish
+    assert np.all(r.t_start_s[1:] == r.t_finish_s[0])
+    assert len(set(r.t_finish_s[1:])) == 1
+    assert r.exec_s[1] == pytest.approx(0.1 + 0.01 * 2)
+    assert r.t_finish_s[1] == pytest.approx(0.1 + 0.1 + 0.02)
+
+
+def test_batching_sustains_higher_throughput_under_overload():
+    """A saturated single-server tier drains an overload burst much
+    faster with batch_size=8 than serially — the continuous-batching
+    throughput lever the ROADMAP asks for."""
+    prof = _flat_profile(0.01)
+    rng = np.random.default_rng(7)
+    k = 600
+    n = rng.integers(4, 40, k).astype(np.float64)
+    stream = make_poisson_stream(n, n, n, rate_hz=500.0, seed=7)
+
+    def run(b):
+        tiers = [SimTier("t", prof, servers=1, batch_size=b,
+                         per_seq_overhead_s=0.001)]
+        return simulate_des(_solo_sched(prof, batch_size=b,
+                                        per_seq_overhead_s=0.001),
+                            stream, tiers, seed=0)
+
+    serial, batched = run(1), run(8)
+    assert batched.throughput_rps() > 1.5 * serial.throughput_rps()
+    assert batched.summary()["mean_wait_s"] < serial.summary()["mean_wait_s"]
+    # every request still served exactly once
+    assert batched.served.all() and serial.served.all()
+
+
+def test_batch_drain_never_exceeds_server_or_batch_caps():
+    prof = _flat_profile(0.02)
+    rng = np.random.default_rng(11)
+    k = 400
+    n = rng.integers(4, 60, k).astype(np.float64)
+    stream = make_poisson_stream(n, n, n, rate_hz=300.0, seed=11)
+    tiers = [SimTier("t", prof, servers=2, batch_size=4,
+                     per_seq_overhead_s=0.002)]
+    r = simulate_des(_solo_sched(prof, batch_size=4,
+                                 per_seq_overhead_s=0.002),
+                     stream, tiers, seed=0)
+    # batches are identified by identical (start, finish); each holds at
+    # most batch_size members and at most `servers` overlap in time
+    batches = {}
+    for i in range(k):
+        batches.setdefault((r.t_start_s[i], r.t_finish_s[i]), []).append(i)
+    assert max(len(v) for v in batches.values()) <= 4
+    assert any(len(v) > 1 for v in batches.values())
+    events = sorted([(s, 1) for s, _ in batches]
+                    + [(f, -1) for _, f in batches],
+                    key=lambda e: (e[0], e[1]))
+    load = peak = 0
+    for _, d in events:
+        load += d
+        peak = max(peak, load)
+    assert peak <= 2
+
+
+def test_batch_aware_queue_delay():
+    sched = MultiTierScheduler(
+        [SchedTier("a", LinearLatencyModel(0, 0, 0.1), None),
+         SchedTier("b", LinearLatencyModel(0, 0, 0.1), None, batch_size=4,
+                   per_seq_overhead_s=0.0),
+         SchedTier("c", LinearLatencyModel(0, 0, 0.1), None, batch_size=4,
+                   per_seq_overhead_s=0.05)],
+        LinearN2M(1.0, 0.0))
+    backlog, in_sys, servers = 0.8, 8, 2
+    q_serial = sched.queue_delay(0, backlog, in_sys, servers)
+    q_free = sched.queue_delay(1, backlog, in_sys, servers)
+    q_cost = sched.queue_delay(2, backlog, in_sys, servers)
+    assert q_serial == backlog / servers
+    assert q_free == pytest.approx(q_serial / 4)     # ideal 4x speedup
+    assert q_free < q_cost < q_serial                # overhead in between
+    # unbatched fast path is exact division (bit-for-bit PR-1 term)
+    assert sched.queue_delay(0, 0.0, 0, servers) == 0.0
+
+
+# ----------------------------------------------------- DES deadlines -------
+def test_infeasible_deadline_is_shed_not_force_enqueued():
+    prof = _flat_profile(0.1)
+    tiers = [SimTier("t", prof, servers=1, queue_capacity=0)]
+    r = simulate_des(_solo_sched(prof),
+                     _stream([0.0, 0.001], slo_s=[0.15, 0.15]),
+                     tiers, seed=0)
+    assert not r.shed[0] and r.shed[1]
+    assert r.tier[1] == -1 and np.isnan(r.latency_s[1])
+    s = r.summary()
+    assert s["shed"] == 1.0 and s["served"] == 1.0
+    assert s["slo_attainment"] == 0.5
+    assert s["overflow"] == 0.0          # no blind force-enqueue
+
+
+def test_full_tier_feasible_deadline_still_force_enqueues():
+    prof = _flat_profile(0.1)
+    tiers = [SimTier("t", prof, servers=1, queue_capacity=0)]
+    r = simulate_des(_solo_sched(prof),
+                     _stream([0.0, 0.001], slo_s=[0.5, 0.5]),
+                     tiers, seed=0)
+    assert r.served.all()
+    assert r.summary()["overflow"] == 1.0
+    assert r.summary()["slo_attainment"] == 1.0
+
+
+def test_no_deadline_keeps_pr1_force_enqueue():
+    prof = _flat_profile(0.1)
+    tiers = [SimTier("t", prof, servers=1, queue_capacity=0)]
+    r = simulate_des(_solo_sched(prof), _stream([0.0, 0.001]), tiers, seed=0)
+    assert r.served.all()
+    assert r.summary()["overflow"] == 1.0
+
+
+def test_deadline_reroutes_to_feasible_tier():
+    fast = _flat_profile(0.01, "fast")
+    slow = _flat_profile(0.05, "slow")
+    sched = MultiTierScheduler(
+        [SchedTier("fast", dataclasses.replace(fast.model), None),
+         SchedTier("slow", dataclasses.replace(slow.model), None)],
+        LinearN2M(1.0, 0.0))
+    tiers = [SimTier("fast", fast, servers=1, queue_capacity=0),
+             SimTier("slow", slow, servers=1)]
+    r = simulate_des(sched, _stream([0.0, 0.001], slo_s=[0.5, 0.5]),
+                     tiers, seed=0)
+    assert r.tier[0] == 0 and r.tier[1] == 1      # rerouted, not shed
+    assert r.served.all()
+    assert r.summary()["slo_attainment"] == 1.0
+
+
+def test_drain_evicts_requests_whose_deadline_already_expired():
+    """A queued request whose deadline passes before a server frees is
+    shed at drain time, letting later work start sooner."""
+    prof = _flat_profile(0.1)
+    tiers = [SimTier("t", prof, servers=1)]
+    r = simulate_des(_solo_sched(prof),
+                     _stream([0.0, 0.01, 0.02],
+                             slo_s=[np.inf, 0.05, np.inf]),
+                     tiers, seed=0)
+    assert not r.shed[0] and r.shed[1] and not r.shed[2]
+    assert r.tier[1] == 0                 # admitted, then evicted at drain
+    assert r.t_start_s[2] == pytest.approx(0.1)   # r1's slot freed for r2
+    assert r.summary()["slo_attainment"] == 0.0   # the only deadline missed
+
+
+# ----------------------------------------------------- overhead fitting ----
+def test_fit_batch_overhead_recovers_sublinear_model():
+    from repro.core.calibration import fit_batch_overhead
+
+    rng = np.random.default_rng(0)
+    b = np.repeat([1, 2, 4, 8, 16], 3).astype(np.float64)
+    t = 0.02 + 0.003 * (b - 1) + rng.normal(0, 1e-4, b.size)
+    t1, o = fit_batch_overhead(b, t)
+    assert t1 == pytest.approx(0.02, rel=0.05)
+    assert o == pytest.approx(0.003, rel=0.05)
+    # noise-driven negative slopes are clamped like the plane fits
+    _, o0 = fit_batch_overhead(np.array([1.0, 2.0]), np.array([0.02, 0.019]))
+    assert o0 == 0.0
+    with pytest.raises(ValueError):
+        fit_batch_overhead(np.array([4.0, 4.0]), np.array([0.1, 0.1]))
+
+
+# -------------------------------------------------------- engine batching --
+def _flat_tier(beta, **kw) -> Tier:
+    return Tier(_flat_profile(beta), **kw)
+
+
+def test_engine_batch_coalesces_in_virtual_time():
+    eng = CollaborativeEngine(
+        tiers=[_flat_tier(0.1, name="t", servers=1, batch_size=3,
+                          per_seq_overhead_s=0.01)],
+        n2m=LinearN2M(1.0, 0.0), seed=0)
+    toks = np.zeros(8, np.int32)
+    r0 = eng.submit(toks, now_s=0.0)
+    r1 = eng.submit(toks, now_s=0.0)
+    r2 = eng.submit(toks, now_s=0.0)
+    r3 = eng.submit(toks, now_s=0.0)
+    assert r0.wait_s == 0.0 and r0.latency_s == pytest.approx(0.1)
+    # r1 opens the queued batch; r2/r3 join it: same wait, growing cost
+    assert r1.wait_s == r2.wait_s == r3.wait_s == pytest.approx(0.1)
+    assert r1.latency_s == pytest.approx(0.1 + 0.1)
+    assert r2.latency_s == pytest.approx(0.1 + 0.11)
+    assert r3.latency_s == pytest.approx(0.1 + 0.12)
+    # a 5th request exceeds batch_size=3 -> queues behind the batch
+    r4 = eng.submit(toks, now_s=0.0)
+    assert r4.wait_s == pytest.approx(0.1 + 0.12)
+
+
+def test_engine_batch1_unchanged_by_batch_fields():
+    """batch_size=1 engines must ignore the batching machinery entirely
+    (PR-1 virtual-time bookkeeping, pinned elsewhere bit-for-bit)."""
+    def run(**kw):
+        eng = CollaborativeEngine(
+            tiers=[_flat_tier(0.05, name="t", servers=2, **kw)],
+            n2m=LinearN2M(1.0, 0.0), seed=0)
+        return [eng.submit(np.zeros(4, np.int32), now_s=i * 0.01).latency_s
+                for i in range(20)]
+    assert run() == run(batch_size=1, per_seq_overhead_s=0.5)
+
+
+def test_engine_sheds_on_infeasible_deadline_and_reports_slo():
+    eng = CollaborativeEngine(
+        tiers=[_flat_tier(10.0, name="t", servers=1, queue_capacity=0)],
+        n2m=LinearN2M(1.0, 0.0), seed=0)
+    toks = np.zeros(4, np.int32)
+    r0 = eng.submit(toks, now_s=0.0, deadline_s=20.0)   # served, meets SLO
+    r1 = eng.submit(toks, now_s=0.0, deadline_s=0.5)    # full + infeasible
+    assert not r0.shed and r0.slo_met is True
+    assert r1.shed and r1.device == -1 and np.isnan(r1.latency_s)
+    assert r1.slo_met is False
+    s = eng.stats()
+    assert s["shed"] == 1 and s["rejected"] == 0
+    assert s["slo_attainment"] == pytest.approx(0.5)
+    assert int(eng.shed_count.sum()) == 1
+
+
+def test_engine_full_tier_feasible_deadline_forced_not_shed():
+    eng = CollaborativeEngine(
+        tiers=[_flat_tier(0.1, name="t", servers=1, queue_capacity=0)],
+        n2m=LinearN2M(1.0, 0.0), seed=0)
+    toks = np.zeros(4, np.int32)
+    eng.submit(toks, now_s=0.0, deadline_s=5.0)
+    r1 = eng.submit(toks, now_s=0.0, deadline_s=5.0)
+    assert not r1.shed
+    s = eng.stats()
+    assert s["shed"] == 0 and s["rejected"] == 1
+    assert s["slo_attainment"] == 1.0

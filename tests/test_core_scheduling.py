@@ -81,6 +81,20 @@ def test_tx_estimator_staleness_probe():
     assert est.n_probes == 1
 
 
+def test_tx_estimator_drops_out_of_order_samples():
+    """Causal ordering: a sample older than the newest ingested one must
+    not move the EWMA or rewind ``_last_update``."""
+    est = TxEstimator(alpha=0.5, init_rtt_s=0.1)
+    est.observe(10.0, 0.1)
+    before = est.rtt(10.0)
+    est.observe(5.0, 5.0)                 # stale: completed out of order
+    assert est.rtt(10.0) == before
+    assert est.n_samples == 1 and est.n_stale == 1
+    assert est._last_update == 10.0
+    est.observe(10.0, 0.2)                # equal timestamps are fine
+    assert est.n_samples == 2
+
+
 def test_tx_time_includes_bandwidth_term():
     est = TxEstimator(init_rtt_s=0.010, bandwidth_bps=100e6)
     # 1 MB payload at 100 Mbps = 80 ms
@@ -140,6 +154,29 @@ def test_decide_batch_matches_decide():
     for i, n in enumerate(ns):
         d = sched.decide(int(n), 0.0, TxEstimator(init_rtt_s=0.05))
         assert batch[i] == d.device
+
+
+def test_decide_batch_uses_configured_bandwidth():
+    """Regression: the payload term was hardcoded to 100 Mbps.  On a slow
+    link the serialization delay must push borderline requests back to
+    the edge."""
+    edge, cloud = _mk_pair()
+    sched = CNMTScheduler(edge=edge, cloud=cloud, n2m=LinearN2M(1.0, 0.0))
+    ns = np.arange(2, 300)
+    rtts = np.full(ns.shape, 0.01)
+    dev_fast = sched.decide_batch(ns, rtts)
+    dev_slow = sched.decide_batch(ns, rtts, bandwidth_bps=1e3)
+    assert not np.array_equal(dev_fast, dev_slow)
+    assert (dev_slow == EDGE).sum() > (dev_fast == EDGE).sum()
+    # exact arithmetic of the slow-link payload term for one request
+    n, m_hat = 100.0, 100.0
+    payload = bytes_for_tokens(n + m_hat, 2)
+    t_e = float(np.asarray(edge.model.predict(n, m_hat)))
+    t_c = float(np.asarray(cloud.model.predict(n, m_hat))) \
+        + 0.01 + payload * 8.0 / 1e3
+    want = EDGE if t_e <= t_c else CLOUD
+    assert sched.decide_batch(np.array([n]), np.array([0.01]),
+                              bandwidth_bps=1e3)[0] == want
 
 
 @settings(max_examples=30, deadline=None)

@@ -100,6 +100,31 @@ def test_token_batcher_respects_budget():
     assert total == 20
 
 
+def test_token_batcher_length_only_mode():
+    """The DES drain path carries only lengths; bucketing and budgets
+    must behave exactly like the token path."""
+    tb = TokenBatcher(max_batch=3, max_tokens_per_batch=1 << 20)
+    lengths = [30, 4, 28, 5, 6]
+    for i, L in enumerate(lengths):
+        tb.add(i, length=L)
+    ids, width = tb.next_batch_ids()
+    assert ids == [1, 3, 4]               # shortest three bucket together
+    assert width == 6
+    ids2, width2 = tb.next_batch_ids()
+    assert ids2 == [2, 0] and width2 == 30
+    assert tb.next_batch_ids() is None and len(tb) == 0
+    with pytest.raises(ValueError):
+        tb.add(9)                         # neither tokens nor length
+
+
+def test_token_batcher_mixed_batch_requires_tokens():
+    tb = TokenBatcher(max_batch=4)
+    tb.add(0, np.ones(3, np.int32))
+    tb.add(1, np.ones(5, np.int32))
+    ids, batch = tb.next_batch()
+    assert ids == [0, 1] and batch.shape == (2, 5)
+
+
 @settings(max_examples=20, deadline=None)
 @given(sizes=st.lists(st.integers(1, 50), min_size=1, max_size=30))
 def test_property_batcher_serves_all_exactly_once(sizes):

@@ -164,6 +164,61 @@ def test_zero_load_matches_analytic_replay_bitwise():
     assert 0.1 < analytic.offload_frac < 0.9   # both regimes exercised
 
 
+# ----------------------------------------------- §II-C sample ordering -----
+class _RecordingTx(TxEstimator):
+    """TxEstimator that logs every observation timestamp it is offered."""
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.stamps = []
+
+    def observe(self, timestamp_s, rtt_s):
+        self.stamps.append(float(timestamp_s))
+        super().observe(timestamp_s, rtt_s)
+
+
+def test_rtt_samples_timestamped_at_completion_not_arrival():
+    """Regression: the DES used to observe §II-C samples with the
+    request's *arrival* time, so a short request overtaking a long one
+    on a multi-server tier rewound the estimator's clock.  Samples must
+    carry the completion time and arrive monotonically."""
+    # local tier is hopeless -> both requests offload to the 2-server
+    # remote tier; r0 is long (finishes last), r1 short (finishes first)
+    local = DeviceProfile("l", LinearLatencyModel(0.0, 0.0, 100.0), 0.0)
+    remote = DeviceProfile("r", LinearLatencyModel(0.1, 0.0, 0.0), 0.0)
+    link = make_profile("cp2", seed=0)
+    est = _RecordingTx(init_rtt_s=float(link.rtt_at(0.0)))
+    sched = MultiTierScheduler(
+        [SchedTier("l", local.model, None),
+         SchedTier("r", remote.model, est)],
+        LinearN2M(1.0, 0.0))
+    stream = RequestStream(
+        t_arrival_s=np.array([0.0, 1.0]),
+        n=np.array([100.0, 1.0]),         # exec 10s vs 0.1s
+        m_out=np.array([1.0, 1.0]), m_real=np.array([1.0, 1.0]))
+    r = simulate_des(sched, stream,
+                     [SimTier("l", local),
+                      SimTier("r", remote, servers=2, link=link)],
+                     seed=0)
+    assert np.array_equal(r.tier, [1, 1])
+    assert r.t_finish_s[1] < r.t_finish_s[0]      # out-of-order completion
+    # completion-stamped, in completion order, never moving backwards
+    assert est.stamps == [r.t_finish_s[1], r.t_finish_s[0]]
+    assert est.stamps == sorted(est.stamps)
+    assert est.n_stale == 0 and est.n_samples == 2
+
+
+def test_rtt_estimator_last_update_matches_latest_completion():
+    sched, tiers = _three_tier()
+    r = simulate_des(sched, _stream(k=1500, rate=80.0), tiers, seed=0)
+    for k in (1, 2):                      # the two remote tiers
+        sel = r.tier == k
+        if not sel.any():
+            continue
+        tx = sched.tiers[k].tx
+        assert tx._last_update == pytest.approx(r.t_finish_s[sel].max())
+
+
 # ------------------------------------------------------------ load/refit ---
 def test_queue_pressure_shifts_load_to_deeper_tiers():
     """As the Poisson rate rises, the shallow capacity-limited tiers

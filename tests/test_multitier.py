@@ -138,6 +138,18 @@ def test_three_tier_picks_argmin():
         assert d.t_pred[d.tier] == min(d.t_pred)
 
 
+def test_schedtier_annotations_resolve():
+    """Regression: ``SchedTier.model`` was annotated with a class the
+    module never imported — a latent NameError under
+    ``typing.get_type_hints`` / dataclass introspection."""
+    import typing
+
+    from repro.core.latency_model import LinearLatencyModel
+
+    hints = typing.get_type_hints(SchedTier)
+    assert hints["model"] is LinearLatencyModel
+
+
 def test_observe_rtt_feeds_only_that_tier():
     edge, cloud = _pair()
     sched = MultiTierScheduler(

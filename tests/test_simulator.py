@@ -106,6 +106,27 @@ def test_simulation_deterministic_given_seed():
     assert np.array_equal(a.device, b.device)
 
 
+def test_table1_decisions_respond_to_link_bandwidth():
+    """Regression for the hardcoded-100 Mbps link: the same trace at a
+    much lower configured bandwidth must change C-NMT's decisions (the
+    payload serialization term now flows from the profile into both the
+    default TxEstimator and the true T_tx)."""
+    stream, _, edge, cloud, n2m, fit = _setup(k=2000)
+    cnmt = CNMTScheduler(edge=edge, cloud=cloud, n2m=n2m)
+    fast = simulate(cnmt, stream, make_profile("cp2", seed=0), edge, cloud,
+                    seed=0)
+    slow = simulate(cnmt, stream,
+                    make_profile("cp2", seed=0, bandwidth_bps=5e4),
+                    edge, cloud, seed=0)
+    assert not np.array_equal(fast.device, slow.device)
+    # a slow link makes offloading pay a real serialization cost
+    assert slow.offload_frac < fast.offload_frac
+    # and offloaded requests got strictly slower, all else equal
+    both = (fast.device == CLOUD) & (slow.device == CLOUD)
+    if both.any():
+        assert np.all(slow.latency_s[both] >= fast.latency_s[both])
+
+
 def test_profiles_cp1_slower_than_cp2():
     cp1 = make_profile("cp1", seed=0)
     cp2 = make_profile("cp2", seed=0)

@@ -1,0 +1,162 @@
+"""Decode fast-path benchmark: compiled scan vs per-sequence host loop.
+
+The paper's latency argument (§II-A, Fig. 2a) needs decode cost linear in
+the output length M; the HOST loop (one jitted dispatch per token per
+sequence) keeps that property but pays a dispatch/sync constant per
+token.  The compiled path (``make_translate_batched``: encoder + KV-cache
+init + the whole greedy decode in ONE ``lax.scan`` dispatch, on-device
+EOS masking) removes that constant and scales across the batch.
+
+Sweeps batch size x source length at a forced output length and reports
+per cell:
+
+* ``tok_s_host``       — generated tokens/sec, per-sequence host loop;
+* ``tok_s_scan``       — generated tokens/sec, compiled batched scan;
+* ``speedup``          — scan / host;
+* ``p50_step_us_host`` — TRUE median over individually timed decode-step
+  dispatches (one jitted step per token, the host path's unit of work);
+* ``step_us_scan``     — the scan path's amortized per-token cost,
+  call-time / (B*M) (individual steps are invisible inside the scan).
+
+Results are printed, returned, emitted as ``name,us_per_call,derived``
+CSV lines for the bench trajectory, and dumped as JSON (``--json`` /
+``out_json=``) so CI can archive the artifact (BENCH_decode.json).
+
+Run: PYTHONPATH=src python benchmarks/decode_throughput.py [--smoke]
+     [--json BENCH_decode.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.nmt import MarianTransformer, TransformerConfig
+
+# small-but-real Marian config: deep enough that a decode step is a real
+# transformer stack, small enough that CI finishes in seconds
+_CFG = dict(vocab_src=256, vocab_tgt=256, d_model=64, heads=4, d_ff=128,
+            enc_layers=2, dec_layers=2, max_src_len=64)
+
+
+def _make_batch(rng, batch: int, src_len: int):
+    src = rng.integers(4, _CFG["vocab_src"], (batch, src_len)).astype(np.int32)
+    mask = np.ones((batch, src_len), np.float32)
+    return src, mask
+
+
+def _time_host(translate_host, src, mask, m_out: int, reps: int):
+    """Best wall-clock of the per-sequence host loop over ``reps``."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        translate_host(src, mask, forced_len=m_out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _host_step_p50_us(model, params, src_row, m_out: int):
+    """Median latency of individual jitted decode-step dispatches on one
+    sequence — the per-token unit the host loop pays M times."""
+    import jax.numpy as jnp
+
+    enc_outs, msk = model.encode(params, jnp.asarray(src_row))
+    state = model.init_cache(params, enc_outs, msk)
+    step = jax.jit(lambda st, tok: model.decode_step(params, st, tok))
+    tok = jnp.asarray(1, jnp.int32)
+    state, logits = step(state, tok)          # compile
+    np.asarray(logits)
+    times = []
+    for _ in range(m_out):
+        t0 = time.perf_counter()
+        state, logits = step(state, tok)
+        tok = jnp.argmax(logits).astype(jnp.int32)
+        np.asarray(tok)                       # the loop's per-step sync
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def _time_scan(translate_fast, src, mask, m_out: int, reps: int):
+    lens, toks = translate_fast(src, mask, forced_len=m_out)  # compile
+    np.asarray(toks)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        lens, toks = translate_fast(src, mask, forced_len=m_out)
+        np.asarray(toks)                     # block on the device value
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(batches=(1, 8, 16), src_lens=(8, 32), m_out: int = 16,
+        reps: int = 3, verbose: bool = True, out_json: str | None = None):
+    cfg = TransformerConfig(max_decode_len=m_out + 2, **_CFG)
+    model = MarianTransformer(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t_fast = model.make_translate_batched(params)
+    t_host = model.make_translate_batched(params, compiled=False)
+    rng = np.random.default_rng(0)
+
+    rows = []
+    csv = []
+    for src_len in src_lens:
+        for batch in batches:
+            src, mask = _make_batch(rng, batch, src_len)
+            # one warm call each so both paths are post-compile
+            t_host(src, mask, forced_len=m_out)
+            host_s = _time_host(t_host, src, mask, m_out, reps)
+            scan_s = _time_scan(t_fast, src, mask, m_out, reps)
+            host_step_us = _host_step_p50_us(model, params, src[0], m_out)
+            n_tok = batch * m_out
+            row = {
+                "batch": batch,
+                "src_len": src_len,
+                "m_out": m_out,
+                "tok_s_host": n_tok / host_s,
+                "tok_s_scan": n_tok / scan_s,
+                "speedup": host_s / scan_s,
+                "p50_step_us_host": host_step_us,
+                "step_us_scan": scan_s / n_tok * 1e6,
+            }
+            rows.append(row)
+            csv.append(
+                f"decode_b{batch}_n{src_len},{scan_s/n_tok*1e6:.1f},"
+                f"tok_s={row['tok_s_scan']:.0f}|host={row['tok_s_host']:.0f}"
+                f"|speedup={row['speedup']:.2f}x")
+            if verbose:
+                print(f"[decode] B={batch:3d} N={src_len:3d} M={m_out} "
+                      f"scan {row['tok_s_scan']:8.0f} tok/s  "
+                      f"host {row['tok_s_host']:8.0f} tok/s  "
+                      f"speedup {row['speedup']:5.2f}x  "
+                      f"scan step {row['step_us_scan']:6.1f}us  "
+                      f"host p50 step {row['p50_step_us_host']:7.1f}us")
+
+    out = {"config": _CFG, "m_out": m_out, "rows": rows,
+           "max_speedup": max(r["speedup"] for r in rows),
+           "best_tok_s": max(r["tok_s_scan"] for r in rows)}
+    if verbose:
+        print(f"[decode] best {out['best_tok_s']:.0f} tok/s, "
+              f"max speedup {out['max_speedup']:.2f}x")
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=2)
+        if verbose:
+            print(f"[decode] wrote {out_json}")
+    return out, csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (seconds, not minutes)")
+    ap.add_argument("--json", default=None, help="dump results JSON here")
+    args = ap.parse_args()
+    if args.smoke:
+        run(batches=(1, 8), src_lens=(8,), m_out=12, reps=2,
+            out_json=args.json)
+    else:
+        run(out_json=args.json)

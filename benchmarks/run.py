@@ -8,6 +8,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
   tiered     — beyond-paper: roofline-priced TPU tiers under C-NMT
   multitier  — beyond-paper: 3-tier queue-aware DES under Poisson load,
                plus a batch-size x rate sweep with SLO-deadline shedding
+  decode     — compiled-scan batched decode vs per-sequence host loop
+               (tokens/sec + p50 step latency, batch x src_len sweep)
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -51,6 +53,15 @@ def main() -> None:
     _, csv = multitier.run(n_requests=min(n_req, 20_000))
     csv_all += csv
     _, csv = multitier.run_batched(n_requests=min(n_req, 20_000))
+    csv_all += csv
+
+    from benchmarks import decode_throughput
+    if fast:
+        _, csv = decode_throughput.run(batches=(1, 8), src_lens=(8,),
+                                       m_out=12, reps=2,
+                                       out_json="BENCH_decode.json")
+    else:
+        _, csv = decode_throughput.run(out_json="BENCH_decode.json")
     csv_all += csv
 
     from benchmarks import roofline

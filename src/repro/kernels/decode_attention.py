@@ -10,6 +10,13 @@ the bandwidth argument for GQA.
 
 ``lengths`` masks the valid prefix of each sequence's cache (slot ==
 position discipline of the serving runtime).
+
+Consumers: the big-model serving decode step, and — via
+``attn_impl="pallas"`` — the batched Marian decode path
+(:meth:`repro.nmt.transformer.MarianTransformer.decode_step` with a
+leading batch dim), which issues one call for self-attention against
+the growing KV cache (lengths = pos+1) and one for cross-attention
+against the precomputed encoder K/V (lengths = source lengths).
 """
 
 from __future__ import annotations

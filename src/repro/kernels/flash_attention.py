@@ -16,6 +16,16 @@ Causal masking is positional (no mask tensor); fully-masked K blocks are
 skipped by the grid via block pruning in the index map (we keep them and
 mask instead: simpler, and XLA-CPU interpret mode is the validation
 target — noted as a TODO for real-TPU tuning).
+
+Padded batches: ``lengths`` (B,) optionally masks each sequence's valid
+KEY prefix (slot < length), the prefix-padding discipline of the serving
+batcher — this is how the batched Marian encoder/teacher-forced path
+routes ragged length-bucketed batches through the kernel without
+pre-trimming.  Rows whose query position is padding attend only to valid
+keys (garbage-in-padding stays confined to padding rows).  ``lengths``
+must be >= 1: a fully-masked row degenerates to exp(0)=1 weights on
+every key (the online-softmax max never leaves NEG_INF), same contract
+as the decode kernel and ``ref.attention_ref``; callers clamp.
 """
 
 from __future__ import annotations
@@ -32,9 +42,9 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, block_q: int, block_k: int,
-                  seq_k: int):
+def _flash_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, scale: float, causal: bool, block_q: int,
+                  block_k: int, seq_k: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -57,11 +67,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * scale      # (bq*rep, block_k)
 
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (bq * rep, block_k), 1)
+    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)     # valid key prefix
     if causal:
         q_pos = (qi * block_q + jax.lax.broadcasted_iota(
             jnp.int32, (bq, rep, block_k), 0)).reshape(bq * rep, block_k)
-        k_pos = ki * block_k + jax.lax.broadcasted_iota(
-            jnp.int32, (bq * rep, block_k), 1)
         s = jnp.where(k_pos <= q_pos, s, NEG_INF)
 
     m_prev = m_ref[...]                # (bq*rep, 1)
@@ -85,13 +96,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     scale: float | None = None,
+                    lengths=None,
                     block_q: int = DEFAULT_BLOCK_Q,
                     block_k: int = DEFAULT_BLOCK_K,
                     interpret: bool = False):
     """q (B,S,H,D); k/v (B,T,Hkv,D) -> (B,S,H,D).
 
     S % block_q == 0 and T % block_k == 0 required (production shapes are
-    powers of two; ops.py pads otherwise).
+    powers of two; ops.py pads otherwise).  ``lengths`` (B,) int32
+    optionally restricts each sequence to its valid key prefix (padded
+    batch discipline); None means all T keys are valid.
     """
     b, s, h, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
@@ -99,11 +113,15 @@ def flash_attention(q, k, v, *, causal: bool = True,
     scale = scale if scale is not None else d ** -0.5
     assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
 
+    if lengths is None:
+        lengths = jnp.full((b,), t, jnp.int32)
+
     # (B*Hkv, S, rep*D): group query heads with their kv head
     qr = (q.reshape(b, s, hkv, rep, d).transpose(0, 2, 1, 3, 4)
           .reshape(b * hkv, s, rep * d))
     kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, t, d)
     vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, t, d)
+    lens = jnp.repeat(lengths.astype(jnp.int32), hkv)      # (B*Hkv,)
 
     grid = (b * hkv, s // block_q, t // block_k)
     kernel = functools.partial(
@@ -114,6 +132,8 @@ def flash_attention(q, k, v, *, causal: bool = True,
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1,), lambda g, qi, ki: (g,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block_q, rep * d), lambda g, qi, ki: (g, qi, 0)),
             pl.BlockSpec((1, block_k, d), lambda g, qi, ki: (g, ki, 0)),
             pl.BlockSpec((1, block_k, d), lambda g, qi, ki: (g, ki, 0)),
@@ -127,7 +147,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
             pltpu.VMEM((block_q * rep, d), jnp.float32),   # o accumulator
         ],
         interpret=interpret,
-    )(qr, kr, vr)
+    )(lens, qr, kr, vr)
 
     return (out.reshape(b, hkv, s, rep, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, s, h, d))

@@ -38,21 +38,28 @@ def _pad_to(x, axis, mult):
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool | None = None):
-    """q (B,S,H,D); k/v (B,T,Hkv,D) -> (B,S,H,D). Pads S/T to blocks."""
+def flash_attention(q, k, v, lengths=None, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q (B,S,H,D); k/v (B,T,Hkv,D) -> (B,S,H,D). Pads S/T to blocks.
+
+    ``lengths`` (B,) int32 marks each sequence's valid KEY prefix — the
+    padded-batch discipline of the batched NMT/serving paths.  When None
+    every real key position is valid; block-padding tail keys are masked
+    either way, so non-causal callers no longer need to pre-pad.
+    """
     interpret = _auto_interpret(interpret)
-    s = q.shape[1]
+    s, t = q.shape[1], k.shape[1]
     bq = min(block_q, max(8, 1 << (s - 1).bit_length()))
-    bk = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (t - 1).bit_length()))
     qp, pad_q = _pad_to(q, 1, bq)
     kp, pad_k = _pad_to(k, 1, bk)
     vp, _ = _pad_to(v, 1, bk)
-    # padded key positions must not contribute: causal masking handles the
-    # q-tail; for k-tail rely on causal mask (pad keys sit at positions
-    # > any real query). Non-causal inputs must be pre-padded by caller.
-    out = _fa.flash_attention(qp, kp, vp, causal=causal, block_q=bq,
-                              block_k=bk, interpret=interpret)
+    if lengths is None:
+        lengths = jnp.full((q.shape[0],), t, jnp.int32)
+    out = _fa.flash_attention(qp, kp, vp, causal=causal,
+                              lengths=jnp.asarray(lengths, jnp.int32),
+                              block_q=bq, block_k=bk, interpret=interpret)
     return out[:, :s] if pad_q or pad_k else out
 
 

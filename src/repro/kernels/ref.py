@@ -12,10 +12,12 @@ import jax.numpy as jnp
 
 # ------------------------------------------------------- flash attention --
 def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
-                  scale: float | None = None):
+                  scale: float | None = None, lengths=None):
     """Materialized softmax attention with GQA head grouping.
 
     q (B,S,H,D), k/v (B,T,Hkv,D) -> (B,S,H,D).  f32 softmax.
+    ``lengths`` (B,) optionally restricts each sequence to its valid key
+    prefix (>= 1 valid key per row required, as in the Pallas kernels).
     """
     b, s, h, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
@@ -33,7 +35,11 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
         mask &= j <= (i + offset)
         if window is not None:
             mask &= j > (i + offset - window)
-    scores = jnp.where(mask, scores, -jnp.inf)
+    mask = jnp.broadcast_to(mask[None], (b, s, t))
+    if lengths is not None:
+        mask &= (jnp.arange(t)[None, None, :]
+                 < lengths.astype(jnp.int32)[:, None, None])
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrst,btgd->bsgrd", w, v.astype(jnp.float32))
     return out.reshape(b, s, h, d).astype(q.dtype)

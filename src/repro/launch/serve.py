@@ -18,7 +18,11 @@ from repro.core.length_regressor import LinearN2M
 from repro.core.profiles import make_profile
 from repro.models.model import LM
 from repro.runtime.engine import CollaborativeEngine, Tier
-from repro.runtime.serving import GenerationSession, make_tier_executor
+from repro.runtime.serving import (
+    GenerationSession,
+    make_batched_tier_executor,
+    make_tier_executor,
+)
 
 
 def main(argv=None):
@@ -52,16 +56,23 @@ def main(argv=None):
     profile = make_profile("cp2", seed=0)
     edge_exec = make_tier_executor(sess, max_new=args.max_new,
                                    vocab_clip=cfg.vocab_size)
+    edge_batched = make_batched_tier_executor(sess, max_new=args.max_new,
+                                              vocab_clip=cfg.vocab_size)
 
     engine = CollaborativeEngine(
         edge=Tier(DeviceProfile("edge", LinearLatencyModel(1e-4, 2e-3, 5e-3)),
-                  executor=edge_exec),
+                  executor=edge_exec, batched_executor=edge_batched,
+                  batch_size=4),
         cloud=Tier(DeviceProfile("pod", LinearLatencyModel(2e-5, 4e-4, 2e-3))),
         n2m=LinearN2M(0.8, 1.0), rtt_fn=profile.rtt_at)
-    for i in range(args.requests):
-        n_len = int(rng.integers(4, 48))
-        engine.submit(rng.integers(4, cfg.vocab_size, (n_len,)
-                                   ).astype(np.int32), now_s=float(i))
+    # concurrent slots of 4: edge-routed members run as REAL batched
+    # generates (submit_batch), not per-sequence calls
+    slot = 4
+    for i in range(0, args.requests, slot):
+        reqs = [rng.integers(4, cfg.vocab_size,
+                             (int(rng.integers(4, 48)),)).astype(np.int32)
+                for _ in range(min(slot, args.requests - i))]
+        engine.submit_batch(reqs, now_s=float(i))
     s = engine.stats()
     print(f"[serve] {s['requests']} reqs, mean {s['mean_latency_s']*1e3:.1f}ms,"
           f" offload {s['offload_frac']*100:.0f}%")

@@ -296,11 +296,20 @@ class LM:
 
     # ---------------------------------------------------------- prefill --
     def prefill(self, params, tokens, *, frames=None, frame_mask=None,
-                window=None, max_len: Optional[int] = None):
+                window=None, max_len: Optional[int] = None, lengths=None):
         """Returns (last_logits (B,V), decode_state).
 
         ``max_len`` pads the KV caches to decode capacity so decode_step
         can append in place (slot == position discipline).
+
+        ``lengths`` (B,) marks per-sequence TRUE prompt lengths in a
+        right-padded batch: the returned logits are gathered at each
+        sequence's last real token and ``state["pos"]`` starts at
+        ``lengths`` so decode appends there.  Correct only for
+        position-masked mixers (attn/mla/shared_attn — causal attention
+        never sees the right-padding); recurrent mixers (mamba2/rwkv6)
+        fold pad steps into their carried state, so callers must not pass
+        ``lengths`` for those plans (GenerationSession enforces this).
         """
         cfg = self.cfg
         s = tokens.shape[1]
@@ -326,11 +335,16 @@ class LM:
                 if isinstance(c, dict) else c
                 for c in caches
             ]
-        state = {"caches": caches,
-                 "pos": jnp.full((tokens.shape[0],), s, jnp.int32)}
+        if lengths is None:
+            pos0 = jnp.full((tokens.shape[0],), s, jnp.int32)
+            last = x[:, -1, :]
+        else:
+            pos0 = jnp.asarray(lengths, jnp.int32)
+            last = x[jnp.arange(tokens.shape[0]), pos0 - 1, :]
+        state = {"caches": caches, "pos": pos0}
         if cfg.is_encoder_decoder:
             state["enc_mask"] = enc_mask
-        return self._logits(params, x[:, -1, :]), state
+        return self._logits(params, last), state
 
     # ------------------------------------------------------ decode state --
     def init_decode_state(self, params_or_none, batch: int, max_len: int,

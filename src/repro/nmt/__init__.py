@@ -12,10 +12,18 @@ evaluated on, implemented in pure JAX and runnable on this CPU.
 All models expose the same surface:
   ``init(key)``, ``encode``, ``decode_step``, ``translate`` (greedy,
   autoregressive — the host loop whose wall-clock is linear in M),
+  ``make_translate_batched`` (the compiled scan fast path: one XLA
+  dispatch decodes a whole padded batch; ``compiled=False`` falls back
+  to the per-sequence host loop for paper-faithful timing),
   and ``forward_teacher`` (batched teacher-forced logits for training).
 """
 
-from repro.nmt.common import RNNConfig, TransformerConfig
+from repro.nmt.common import (
+    RNNConfig,
+    TransformerConfig,
+    batched_greedy_decode,
+    greedy_decode,
+)
 from repro.nmt.lstm import BiLSTMSeq2Seq
 from repro.nmt.gru import GRUSeq2Seq
 from repro.nmt.transformer import MarianTransformer
@@ -24,6 +32,8 @@ from repro.nmt.registry import PAPER_MODELS, make_paper_model
 __all__ = [
     "RNNConfig",
     "TransformerConfig",
+    "batched_greedy_decode",
+    "greedy_decode",
     "BiLSTMSeq2Seq",
     "GRUSeq2Seq",
     "MarianTransformer",

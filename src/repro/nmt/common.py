@@ -1,14 +1,30 @@
-"""Shared building blocks for the paper-faithful seq2seq models."""
+"""Shared building blocks for the paper-faithful seq2seq models.
+
+Two greedy-decode paths live here, with opposite goals:
+
+* :func:`greedy_decode` — the HOST loop: one jitted step dispatch per
+  token.  Its wall-clock is linear in M by construction, which is the
+  paper-faithful timing path (§II-A, Fig. 2a) used by the offline
+  characterization sweeps.
+* :func:`batched_greedy_decode` — the COMPILED fast path: a single
+  ``jax.lax.scan`` over decode steps with a leading batch dimension and
+  on-device EOS ``done`` masking, i.e. ONE XLA dispatch per translate
+  call instead of one per token.  This is what serving uses; the host
+  loop stays behind the ``compiled=False`` flag of the models'
+  ``make_translate_batched`` wrappers for timing studies.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.data.tokenizer import BOS_ID, EOS_ID
+from repro.data.tokenizer import BOS_ID, EOS_ID, PAD_ID
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +119,31 @@ def scan_rnn(cell, params, init_carry, xs, reverse: bool = False):
     return jax.lax.scan(step, init_carry, xs, reverse=reverse)
 
 
+def masked_scan_rnn(cell, params, init_carry, xs, mask,
+                    reverse: bool = False):
+    """Batched cell over the TIME axis of batch-major ``xs`` (B,N,...).
+
+    ``mask`` (B,N) freezes the carry on padding steps (the ragged
+    prefix-padded batches of the compiled decode path), so the final
+    carry equals what the per-sequence unpadded scan would produce; pad
+    positions emit zeros.  Returns ``(final_carry, outs (B,N,H))``.
+    """
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    m_t = jnp.moveaxis(mask, 1, 0)
+
+    def step(carry, inp):
+        x_t, m = inp
+        new_carry, out = cell(params, carry, x_t)
+        keep = m[:, None] > 0
+        new_carry = jax.tree.map(
+            lambda new, old: jnp.where(keep, new, old), new_carry, carry)
+        return new_carry, jnp.where(keep, out, jnp.zeros_like(out))
+
+    carry, outs = jax.lax.scan(step, init_carry, (xs_t, m_t),
+                               reverse=reverse)
+    return carry, jnp.moveaxis(outs, 0, 1)
+
+
 # ------------------------------------------------------------- attention --
 def luong_attention(query_h, enc_outs, enc_mask):
     """Dot-product (Luong) attention: (H,), (N,H), (N,) -> context (H,)."""
@@ -110,6 +151,14 @@ def luong_attention(query_h, enc_outs, enc_mask):
     scores = jnp.where(enc_mask > 0, scores, -1e30)
     w = jax.nn.softmax(scores)
     return w @ enc_outs
+
+
+def luong_attention_batch(query_h, enc_outs, enc_mask):
+    """Batched Luong: (B,H), (B,N,H), (B,N) -> context (B,H)."""
+    scores = jnp.einsum("bnh,bh->bn", enc_outs, query_h)
+    scores = jnp.where(enc_mask > 0, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bn,bnh->bh", w, enc_outs)
 
 
 # ----------------------------------------------------------------- decode --
@@ -139,6 +188,144 @@ def greedy_decode(decode_step, init_state, max_len: int,
             break
         out.append(tid)
     return len(out), jnp.asarray(out, jnp.int32)
+
+
+def scan_greedy_steps(decode_step, state, token0, batch: int, steps: int, *,
+                      keep_eos: bool = False, forced: bool = False):
+    """The shared compiled greedy-decode scan body.
+
+    Carry is ``(state, next_token (B,), done (B,))``; each of the
+    ``steps`` iterations emits the carried token, then steps the model
+    once to produce the next (``decode_step(state, tokens (B,)) ->
+    (state, logits (B,V))``).  EOS bookkeeping stays on-device:
+
+    * ``keep_eos=False`` PAD-masks the EOS slot itself (the NMT models'
+      contract — emitted tokens are exactly the pre-EOS output);
+    * ``keep_eos=True`` emits the EOS token and PAD-masks only the
+      positions after it (the serving sessions' contract);
+    * ``forced=True`` ignores EOS entirely (controlled-(N, M) grids).
+
+    Returns ``(lengths (B,), tokens (B, steps))`` device arrays, lengths
+    counting pre-EOS tokens either way.  Both
+    :func:`batched_greedy_decode` and
+    :class:`repro.runtime.serving.GenerationSession` build on this one
+    body, so EOS/done semantics cannot drift between them.
+    """
+    done0 = jnp.zeros((batch,), bool)
+
+    def step(carry, _):
+        state, tok, done = carry
+        if forced:
+            emit, live, done2 = tok, jnp.ones((batch,), bool), done
+        else:
+            is_eos = tok == EOS_ID
+            live = ~(done | is_eos)              # emits a real token now
+            emit = (jnp.where(done, PAD_ID, tok) if keep_eos
+                    else jnp.where(live, tok, PAD_ID))
+            done2 = done | is_eos
+        state, logits = decode_step(state, tok)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (state, nxt, done2), (emit, live)
+
+    _, (toks, live) = jax.lax.scan(step, (state, token0, done0),
+                                   None, length=steps)
+    lengths = jnp.sum(live.astype(jnp.int32), axis=0)
+    return lengths, jnp.transpose(toks)          # (B,), (B, steps)
+
+
+def batched_greedy_decode(decode_step, init_state, batch: int, max_len: int,
+                          forced_len: int | None = None):
+    """Compiled batched greedy decode: ONE ``lax.scan`` over decode steps.
+
+    ``decode_step(state, tokens (B,)) -> (state, logits (B,V))`` must carry
+    a leading batch dimension (the models' ``decode_step`` with batched
+    state, or a ``jax.vmap`` of the per-sequence step).  EOS handling is
+    on-device: a ``done`` mask freezes finished sequences (their emitted
+    slots become PAD) while the scan keeps stepping the still-live ones —
+    no per-token host round-trip.
+
+    Returns ``(lengths (B,) int32, tokens (B, steps) int32)`` as device
+    arrays: per-sequence output length EXCLUDING the EOS token (the
+    paper's M, matching :func:`greedy_decode`'s ``m_out`` per sequence)
+    and the emitted tokens, PAD-masked at and after each EOS.
+
+    ``forced_len`` runs exactly that many steps ignoring EOS — same
+    controlled-(N, M)-grid contract as :func:`greedy_decode`.
+    """
+    steps = forced_len if forced_len is not None else max_len
+    state, logits = decode_step(init_state,
+                                jnp.full((batch,), BOS_ID, jnp.int32))
+    token0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return scan_greedy_steps(decode_step, state, token0, batch, steps,
+                             keep_eos=False, forced=forced_len is not None)
+
+
+def build_translate_batched(model, params, make_state, *,
+                            compiled: bool = True):
+    """Shared scaffolding behind the models' ``make_translate_batched``.
+
+    ``make_state(src (B,N), src_mask (B,N)) -> batched decode state`` is
+    the only model-specific piece (encode + state assembly); stepping is
+    ``model.decode_step`` with a leading batch dim.  ``compiled=True``
+    jits encoder + state init + the whole scan decode into ONE dispatch
+    per (B, N) shape; ``compiled=False`` is the per-sequence host loop
+    (the paper-faithful, linear-in-M timing path).  Both return
+    ``translate(src, src_mask=None, forced_len=None) ->
+    (lengths (B,), tokens (B, steps))``.
+    """
+    if not compiled:
+        translate = model.make_translate(params)
+
+        def translate_host(src, src_mask=None, forced_len=None):
+            return host_translate_batched(translate, src, src_mask,
+                                          forced_len)
+        return translate_host
+
+    step = lambda st, tok: model.decode_step(params, st, tok)
+
+    @functools.partial(jax.jit, static_argnames=("forced_len",))
+    def run(src, src_mask, forced_len=None):
+        state = make_state(src, src_mask)
+        return batched_greedy_decode(step, state, src.shape[0],
+                                     model.cfg.max_decode_len, forced_len)
+
+    def translate_batch(src, src_mask=None, forced_len=None):
+        src = jnp.asarray(src, jnp.int32)
+        if src_mask is None:
+            src_mask = jnp.ones(src.shape, jnp.float32)
+        return run(src, jnp.asarray(src_mask), forced_len=forced_len)
+
+    return translate_batch
+
+
+def host_translate_batched(translate, src_tokens, src_mask=None,
+                           forced_len: int | None = None):
+    """Paper-faithful batch fallback: per-sequence HOST-loop translate.
+
+    Runs ``translate`` (a model's ``make_translate`` closure) row by row
+    over a prefix-padded batch — one jitted dispatch per token per
+    sequence, the timing-faithful slow path the compiled scan is measured
+    against.  Returns ``(lengths (B,), tokens (B, width))`` numpy arrays,
+    PAD-filled past each row's length, mirroring
+    :func:`batched_greedy_decode`'s contract.
+    """
+    src = np.asarray(src_tokens, np.int32)
+    b, n = src.shape
+    mask = (np.ones((b, n), np.float32) if src_mask is None
+            else np.asarray(src_mask))
+    src_lens = mask.astype(bool).sum(axis=1)
+    lengths = np.zeros((b,), np.int32)
+    rows = []
+    for i in range(b):
+        m_out, toks = translate(src[i, :int(src_lens[i])],
+                                forced_len=forced_len)
+        lengths[i] = int(m_out)
+        rows.append(np.asarray(toks, np.int32))
+    width = max(1, max(len(r) for r in rows))
+    out = np.full((b, width), PAD_ID, np.int32)
+    for i, r in enumerate(rows):
+        out[i, :len(r)] = r
+    return lengths, out
 
 
 def cross_entropy(logits, targets, mask):

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.nmt.common import (
     RNNConfig,
+    build_translate_batched,
     cross_entropy,
     dense,
     dense_params,
@@ -21,6 +22,7 @@ from repro.nmt.common import (
     greedy_decode,
     gru_cell,
     gru_params,
+    masked_scan_rnn,
     scan_rnn,
 )
 
@@ -41,12 +43,25 @@ class GRUSeq2Seq:
         }
 
     def encode(self, params, src_tokens, src_mask=None):
+        """(N,) -> context (H,); or batched (B,N) [+ mask] -> (B,H).
+
+        The batched path freezes the recurrence on padding steps, so a
+        prefix-padded row yields the same context as its trimmed self.
+        """
         x = params["src_embed"][src_tokens]
+        if src_tokens.ndim == 2:
+            b = src_tokens.shape[0]
+            if src_mask is None:
+                src_mask = jnp.ones(src_tokens.shape, jnp.float32)
+            h0 = jnp.zeros((b, self.cfg.hidden))
+            h, _ = masked_scan_rnn(gru_cell, params["enc"], h0, x, src_mask)
+            return h
         h0 = jnp.zeros((self.cfg.hidden,))
         h, _ = scan_rnn(gru_cell, params["enc"], h0, x)
         return h  # fixed-size context = final hidden state
 
     def decode_step(self, params, state, token):
+        """One step; batch-polymorphic (state (H,)+scalar or (B,H)+(B,))."""
         x = params["tgt_embed"][token]
         h, _ = gru_cell(params["dec"], state, x)
         return h, dense(params["out"], h)
@@ -61,6 +76,18 @@ class GRUSeq2Seq:
                                  forced_len=forced_len)
 
         return translate
+
+    def make_translate_batched(self, params, *, compiled: bool = True):
+        """Batched translate: (B,N) [+ (B,N) mask] -> (lengths, tokens).
+
+        ``compiled=True`` is the scan fast path (one XLA dispatch per
+        call); ``compiled=False`` the paper-faithful per-sequence host
+        loop (timing path).
+        """
+        return build_translate_batched(
+            self, params,
+            lambda src, mask: self.encode(params, src, mask),
+            compiled=compiled)
 
     def forward_teacher(self, params, src, src_mask, tgt_in):
         def single(src_i, mask_i, tgt_i):

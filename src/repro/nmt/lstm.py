@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.nmt.common import (
     RNNConfig,
+    build_translate_batched,
     cross_entropy,
     dense,
     dense_params,
@@ -25,6 +26,8 @@ from repro.nmt.common import (
     lstm_cell,
     lstm_params,
     luong_attention,
+    luong_attention_batch,
+    masked_scan_rnn,
     scan_rnn,
 )
 
@@ -63,11 +66,32 @@ class BiLSTMSeq2Seq:
 
     # ------------------------------------------------------------- encode
     def encode(self, params, src_tokens, src_mask=None):
-        """src_tokens (N,) int32 -> enc_outs (N,H), decoder init carries."""
+        """src_tokens (N,) int32 -> enc_outs (N,H), decoder init carries.
+
+        Batched (B,N) inputs take the masked-scan path: the recurrence
+        freezes on padding steps (both directions), so each prefix-padded
+        row's final states match its trimmed self; pad positions of
+        ``enc_outs`` are zeros and masked out of attention downstream.
+        """
         cfg = self.cfg
         x = params["src_embed"][src_tokens]
         if src_mask is None:
             src_mask = jnp.ones(src_tokens.shape, jnp.float32)
+        if src_tokens.ndim == 2:
+            b = src_tokens.shape[0]
+            h0 = jnp.zeros((b, cfg.hidden))
+            carries_for_dec = []
+            for layer in params["enc"]:
+                (hf, cf), outs_f = masked_scan_rnn(
+                    lstm_cell, layer["fwd"], (h0, h0), x, src_mask)
+                (hb, cb), outs_b = masked_scan_rnn(
+                    lstm_cell, layer["bwd"], (h0, h0), x, src_mask,
+                    reverse=True)
+                x = dense(layer["proj"],
+                          jnp.concatenate([outs_f, outs_b], axis=-1))
+                x = jnp.tanh(x)
+                carries_for_dec.append((0.5 * (hf + hb), 0.5 * (cf + cb)))
+            return x, tuple(carries_for_dec), src_mask
         h0 = jnp.zeros((cfg.hidden,))
         carries_for_dec = []
         for layer in params["enc"]:
@@ -82,14 +106,20 @@ class BiLSTMSeq2Seq:
 
     # -------------------------------------------------------- decode step
     def decode_step(self, params, state, token):
-        """One autoregressive step.  state = (carries, enc_outs, enc_mask)."""
+        """One autoregressive step.  state = (carries, enc_outs, enc_mask).
+
+        Batch-polymorphic: with ``token`` (B,) and state carrying a
+        leading batch dimension it advances all sequences at once (the
+        compiled-scan decode path).
+        """
         carries, enc_outs, enc_mask = state
         x = params["tgt_embed"][token]
         new_carries = []
         for layer_p, carry in zip(params["dec"], carries):
             carry, x = lstm_cell(layer_p, carry, x)
             new_carries.append(carry)
-        ctx = luong_attention(x, enc_outs, enc_mask)
+        attend = luong_attention_batch if jnp.ndim(token) else luong_attention
+        ctx = attend(x, enc_outs, enc_mask)
         x = jnp.tanh(dense(params["attn_combine"],
                            jnp.concatenate([x, ctx], axis=-1)))
         logits = dense(params["out"], x)
@@ -108,6 +138,20 @@ class BiLSTMSeq2Seq:
                                  forced_len=forced_len)
 
         return translate
+
+    def make_translate_batched(self, params, *, compiled: bool = True):
+        """Batched translate: (B,N) [+ (B,N) mask] -> (lengths, tokens).
+
+        ``compiled=True`` runs the single-dispatch scan fast path;
+        ``compiled=False`` the per-sequence host loop (paper-faithful
+        timing path).
+        """
+        def make_state(src, mask):
+            enc_outs, carries, m = self.encode(params, src, mask)
+            return (carries, enc_outs, m)
+
+        return build_translate_batched(self, params, make_state,
+                                       compiled=compiled)
 
     # ------------------------------------------------------------- train
     def forward_teacher(self, params, src, src_mask, tgt_in):

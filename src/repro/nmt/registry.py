@@ -22,13 +22,16 @@ PAPER_MODELS = {
 
 
 def make_paper_model(dataset: str, *, scale: float = 1.0,
-                     vocab: int = 8000, max_decode_len: int = 256):
+                     vocab: int = 8000, max_decode_len: int = 256,
+                     attn_impl: str = "xla"):
     """Instantiate the paper's model for ``dataset``.
 
     ``scale`` shrinks widths/layers for CPU-budget-friendly calibration
     runs (scale=1 is the paper's size). Latency *linearity* in N and M —
     the property C-NMT exploits — is scale-invariant; the fitted
-    alpha/beta just shrink with it.
+    alpha/beta just shrink with it.  ``attn_impl`` selects the Marian
+    attention backend for the batched paths ("xla" | "pallas"); the RNN
+    models ignore it.
     """
     family, hp, pair = PAPER_MODELS[dataset]
     s = lambda v: max(8, int(v * scale))
@@ -50,5 +53,5 @@ def make_paper_model(dataset: str, *, scale: float = 1.0,
             dec_layers=max(1, int(hp["dec_layers"] * min(scale * 2, 1.0))),
             max_decode_len=max_decode_len,
         )
-        model = MarianTransformer(cfg)
+        model = MarianTransformer(cfg, attn_impl=attn_impl)
     return model, pair

@@ -3,6 +3,7 @@ C-NMT-routed tiered serving engine."""
 
 from repro.runtime.serving import (
     GenerationSession,
+    make_batched_tier_executor,
     make_prefill_step,
     make_serve_step,
     make_tier_executor,
@@ -11,6 +12,7 @@ from repro.runtime.engine import CollaborativeEngine, Tier, RequestResult
 
 __all__ = [
     "GenerationSession",
+    "make_batched_tier_executor",
     "make_prefill_step",
     "make_serve_step",
     "make_tier_executor",

@@ -37,6 +37,17 @@ sub-linear continuous-batching model, same formula as the DES).  A
 member's reported latency reflects the batch state at its own admission;
 ``batch_size=1`` keeps the exact unbatched virtual-time bookkeeping.
 
+REAL batched execution: a tier carrying a ``batched_executor`` (from
+:func:`repro.runtime.serving.make_batched_tier_executor`) serves
+:meth:`CollaborativeEngine.submit_batch` — concurrent arrivals routed
+to it are drained through a length-bucketed
+:class:`~repro.data.pipeline.TokenBatcher` into padded blocks of up to
+``batch_size`` sequences, each block runs as ONE batched generate (the
+compiled-scan decode path), and every member gets its own
+``(m_out, tokens)`` plus the measured batch wall-clock in its latency —
+execution finally matches the batch-aware occupancy accounting instead
+of only being modelled by it.
+
 Deadline-aware admission (SLO): ``submit(..., deadline_s=...)`` attaches
 a relative deadline.  When the chosen tier is full the engine re-routes
 to the cheapest tier with space whose predicted total meets the
@@ -55,6 +66,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.calibration import OnlineCalibrator
+from repro.data.pipeline import TokenBatcher
 from repro.core.latency_model import DeviceProfile, bytes_for_tokens
 from repro.core.length_regressor import LinearN2M
 from repro.core.scheduler import (
@@ -80,9 +92,14 @@ class Tier:
     ``batch_size`` that start together when the server frees, a batch of
     b costing  max member exec + ``per_seq_overhead_s``·(b−1).  The
     overhead is calibratable from batched timing grids
-    (``repro.core.calibration.fit_batch_overhead``); real ``executor``
-    calls still run per sequence — only the occupancy/latency accounting
-    is batch-aware.
+    (``repro.core.calibration.fit_batch_overhead``).
+
+    ``batched_executor`` (``(block (b,w), lengths) -> [(m_out, tokens)]``,
+    built by :func:`repro.runtime.serving.make_batched_tier_executor`)
+    makes execution itself batched: ``submit_batch`` drains concurrent
+    arrivals into length-bucketed blocks of up to ``batch_size`` and runs
+    each block as one real batched generate.  Per-request ``executor``
+    calls (``submit``) stay per-sequence.
     """
 
     profile: DeviceProfile
@@ -94,6 +111,7 @@ class Tier:
     bandwidth_bps: float = 100e6
     batch_size: int = 1
     per_seq_overhead_s: float = 0.0
+    batched_executor: Optional[Callable] = None   # (block, lengths) -> [...]
 
     def __post_init__(self):
         if self.name is None:
@@ -145,6 +163,9 @@ class _TierOccupancy:
         d = min(self.free_at) - now
         return d if d > 0.0 else 0.0
 
+    def free_servers(self, now: float) -> int:
+        return sum(1 for f in self.free_at if f <= now)
+
     def queue_len(self, now: float) -> int:
         self._prune(now)
         return sum(1 for s, _ in self.inflight if s > now)
@@ -181,6 +202,22 @@ class _TierOccupancy:
             # started immediately is already running and cannot be joined
             self._tail[idx] = [start, exec_s, 1] if start > now else None
         self.inflight.append((start, finish))
+        return wait, exec_s
+
+    def assign_batch(self, now: float, exec_s: float,
+                     count: int) -> tuple[float, float]:
+        """Book one REAL batch of ``count`` members, measured to take
+        ``exec_s``, on the earliest-free server; every member shares the
+        (wait, service).  The batch is closed — it started as a unit, so
+        later virtual-time arrivals queue behind it instead of joining."""
+        self._prune(now)
+        idx = min(range(len(self.free_at)), key=self.free_at.__getitem__)
+        wait = max(self.free_at[idx] - now, 0.0)
+        start = now + wait
+        finish = start + exec_s
+        self.free_at[idx] = finish
+        self._tail[idx] = None
+        self.inflight.extend([(start, finish)] * count)
         return wait, exec_s
 
 
@@ -309,15 +346,30 @@ class CollaborativeEngine:
         d = self.scheduler.decide(n, now, qd)
         k = self._admit(d, now, deadline_s)
         if k < 0:                       # shed: never enters any queue
-            res = RequestResult(self._next_id, -1, n, 0, float("nan"), d,
-                                deadline_s=deadline_s, shed=True)
-            self._next_id += 1
-            self.results.append(res)
-            return res
+            return self._shed(n, d, deadline_s)
         tier = self.tiers[k]
-
         m_out, exec_s = tier.run(tokens, d.m_hat, self.rng)
         wait, service_s = self._occ[k].assign(now, exec_s)
+        return self._complete(k, d, n, m_out, exec_s, wait, service_s, now,
+                              deadline_s)
+
+    def _shed(self, n: int, d: MultiTierDecision,
+              deadline_s: Optional[float]) -> RequestResult:
+        res = RequestResult(self._next_id, -1, n, 0, float("nan"), d,
+                            deadline_s=deadline_s, shed=True)
+        self._next_id += 1
+        self.results.append(res)
+        return res
+
+    def _complete(self, k: int, d: MultiTierDecision, n: int, m_out: int,
+                  exec_s: float, wait: float, service_s: float, now: float,
+                  deadline_s: Optional[float]) -> RequestResult:
+        """Shared completion bookkeeping: link terms, result record,
+        online-calibration feedback.  ``exec_s`` is the execution sample
+        fed to the calibrator (for a real batch: the batch wall-clock,
+        an upper bound on the member's solo cost — feedback noise the
+        refit's robust plane fit tolerates)."""
+        tier = self.tiers[k]
         if tier.rtt_fn is not None:
             rtt = float(tier.rtt_fn(now))
             payload = float(bytes_for_tokens(
@@ -347,25 +399,102 @@ class CollaborativeEngine:
                     self.scheduler.n2m)
         return res
 
+    # -------------------------------------------------------- submit_batch --
+    def submit_batch(self, requests: Sequence[np.ndarray], *,
+                     now_s: Optional[float] = None,
+                     deadline_s: Optional[float] = None,
+                     ) -> List[RequestResult]:
+        """Route and serve a slot of CONCURRENT requests with real
+        batched execution.
+
+        Each request is routed/admitted individually (same decision rule
+        and deadline shedding as :meth:`submit`); requests landing on the
+        same tier are drained through a length-bucketed
+        :class:`TokenBatcher` into padded blocks of up to that tier's
+        ``batch_size`` and — where the tier carries a
+        ``batched_executor`` — each block runs as ONE real batched
+        generate whose measured wall-clock is booked as a single batch
+        occupancy (``assign_batch``).  Tiers without a batched executor
+        fall back to the per-request path.  Results come back in request
+        order.
+
+        Concurrent-slot semantics: all members are decided at the same
+        ``now`` (they arrived together), but earlier same-slot members
+        COUNT against the bounded queues (``pending``), so a slot cannot
+        oversubscribe a capacity the sequential path would enforce.
+        Deadline feasibility still uses slot-start predictions — the
+        queueing a member induces on its batch peers shows up in their
+        measured latency, not in their admission test.
+        """
+        now = self._now() if now_s is None else now_s
+        results: List[Optional[RequestResult]] = [None] * len(requests)
+        groups: Dict[int, List[tuple]] = {}
+        pending = [0] * len(self.tiers)
+        for i, tokens in enumerate(requests):
+            tokens = np.asarray(tokens, np.int32)
+            n = int(len(tokens))
+            qd = [occ.queue_delay(now) for occ in self._occ]
+            d = self.scheduler.decide(n, now, qd)
+            k = self._admit(d, now, deadline_s, pending)
+            if k < 0:
+                results[i] = self._shed(n, d, deadline_s)
+                continue
+            pending[k] += 1
+            groups.setdefault(k, []).append((i, tokens, d))
+
+        for k, members in groups.items():
+            tier = self.tiers[k]
+            if tier.batched_executor is None:
+                for i, toks, d in members:
+                    m_out, exec_s = tier.run(toks, d.m_hat, self.rng)
+                    wait, service_s = self._occ[k].assign(now, exec_s)
+                    results[i] = self._complete(
+                        k, d, len(toks), m_out, exec_s, wait, service_s,
+                        now, deadline_s)
+                continue
+            tb = TokenBatcher(max_batch=max(tier.batch_size, 1))
+            for j, (_, toks, _) in enumerate(members):
+                tb.add(j, toks)
+            while (nb := tb.next_batch()) is not None:
+                ids, block = nb
+                lens = [len(members[j][1]) for j in ids]
+                t0 = time.perf_counter()
+                outs = tier.batched_executor(block, lens)
+                exec_s = time.perf_counter() - t0
+                wait, service_s = self._occ[k].assign_batch(
+                    now, exec_s, len(ids))
+                for j, (m_out, _) in zip(ids, outs):
+                    i, toks, d = members[j]
+                    results[i] = self._complete(
+                        k, d, len(toks), int(m_out), exec_s, wait,
+                        service_s, now, deadline_s)
+        return results
+
     def _admit(self, d: MultiTierDecision, now: float,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               pending: Optional[List[int]] = None) -> int:
         """Bounded-FIFO admission: re-route from a full tier to the
         next-best tier with space; if everything is full, keep the choice
         and count the rejection.  Deadline-carrying requests re-route
         only to tiers predicted to meet the deadline and are shed
         (returns -1) when none can — predicted-completion-vs-deadline
-        instead of blind force-enqueue."""
+        instead of blind force-enqueue.
+
+        ``pending`` (per-tier counts) charges same-slot members already
+        admitted by ``submit_batch`` against the bounded queues, so one
+        concurrent slot cannot oversubscribe a capacity the sequential
+        ``submit`` path would have enforced."""
         k = d.tier
-        if self._has_space(k, now):
+        if self._has_space(k, now, pending):
             return k
         ranked = sorted(range(len(self.tiers)), key=lambda j: d.t_pred[j])
         if deadline_s is None:
             for j in ranked:
-                if self._has_space(j, now):
+                if self._has_space(j, now, pending):
                     return j
             self.rejected[k] += 1
             return k
-        spaced = [j for j in ranked if self._has_space(j, now)]
+        spaced = [j for j in ranked if self._has_space(j, now, pending)]
         feasible = [j for j in spaced if d.t_pred[j] <= deadline_s]
         if feasible:
             return feasible[0]
@@ -375,11 +504,20 @@ class CollaborativeEngine:
         self.shed_count[k] += 1
         return -1
 
-    def _has_space(self, k: int, now: float) -> bool:
+    def _has_space(self, k: int, now: float,
+                   pending: Optional[List[int]] = None) -> bool:
         cap = self.tiers[k].queue_capacity
-        if cap is None or self._occ[k].queue_delay(now) == 0.0:
-            return True          # unbounded, or a server is free right now
-        return self._occ[k].queue_len(now) < cap
+        extra = 0 if pending is None else pending[k]
+        if cap is None:
+            return True
+        # same-slot pending members first fill the ACTUALLY-free batch
+        # slots (free servers x batch_size), then charge the bounded
+        # queue — mirroring what sequential submits would enforce
+        slots = (self._occ[k].free_servers(now)
+                 * max(self.tiers[k].batch_size, 1))
+        if slots and extra < slots:
+            return True          # a server (batch slot) is free right now
+        return self._occ[k].queue_len(now) + extra - slots < cap
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> Dict[str, object]:

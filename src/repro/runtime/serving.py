@@ -5,31 +5,64 @@ the multi-pod dry-run lowers for the prefill/decode input shapes — one
 new token against a KV cache (or SSM state) of the configured context.
 
 :class:`GenerationSession` drives them for real CPU generation (smoke
-scale): prefill once, then greedy decode with EOS handling — the serving
-analog of ``repro.nmt``'s translate loop.  :func:`make_tier_executor`
-adapts a session into the ``tokens -> (m_out, out_tokens)`` callable a
-:class:`~repro.runtime.engine.Tier` expects, so a real model can serve as
-any tier of the N-tier collaborative engine.
+scale).  Decode has two paths:
+
+* **compiled scan** (default): prefill once, then ONE ``jax.lax.scan``
+  over all ``max_new`` decode steps with the EOS ``done`` mask kept
+  on-device — a single XLA dispatch per generate call and a single
+  device->host transfer at the end, instead of one dispatch + sync per
+  token.  Post-EOS positions are PAD-masked and per-sequence output
+  lengths are returned (:meth:`GenerationSession.generate_with_lengths`).
+* **host loop** (``host_loop=True``): the per-token dispatch loop whose
+  wall-clock is linear in the generated length M — the paper-faithful
+  timing path (§II-A), kept for characterization runs.
+
+Input shapes are padded to LENGTH BUCKETS (batch -> next power of two,
+prompt width -> next bucket boundary) so each (batch, width, max_new)
+triple compiles exactly once; a one-line warning is logged per new
+compiled shape.  Width bucketing right-pads with PAD and threads true
+per-sequence ``lengths`` through ``LM.prefill`` — numerically invisible
+for position-masked mixers (attn/mla/shared_attn); plans with recurrent
+mixers (mamba2/rwkv6) skip width bucketing since their carried state
+would fold the pad steps in.
+
+:func:`make_tier_executor` adapts a session into the ``tokens ->
+(m_out, out_tokens)`` callable a :class:`~repro.runtime.engine.Tier`
+expects; :func:`make_batched_tier_executor` is its REAL batched
+counterpart — one drained :class:`~repro.data.pipeline.TokenBatcher`
+batch in, one batched generate, per-sequence ``(m_out, tokens)`` out —
+which the engine's ``submit_batch`` uses so real execution matches the
+batch-aware occupancy accounting.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+import logging
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.tokenizer import EOS_ID
+from repro.data.tokenizer import EOS_ID, PAD_ID
 from repro.models.model import LM
+from repro.nmt.common import scan_greedy_steps
+
+_LOG = logging.getLogger(__name__)
+
+# mixers whose decode caches are position-masked per sequence (slot ==
+# position, mask idx <= pos), making right-padded ragged prefill exact
+_POSITION_MASKED_MIXERS = ("attn", "mla", "shared_attn")
 
 
 def make_prefill_step(model: LM, *, max_len: Optional[int] = None) -> Callable:
-    """prefill_step(params, tokens[, frames]) -> (last_logits, decode_state)."""
+    """prefill_step(params, tokens[, lengths][, frames]) ->
+    (last_logits, decode_state)."""
 
-    def prefill_step(params, tokens, frames=None):
+    def prefill_step(params, tokens, lengths=None, frames=None):
         kw = {"frames": frames} if frames is not None else {}
-        return model.prefill(params, tokens, max_len=max_len, **kw)
+        return model.prefill(params, tokens, max_len=max_len,
+                             lengths=lengths, **kw)
 
     return prefill_step
 
@@ -47,52 +80,230 @@ def make_serve_step(model: LM) -> Callable:
     return serve_step
 
 
+def _next_pow2(n: int, floor: int = 1) -> int:
+    return max(floor, 1 << (max(n, 1) - 1).bit_length())
+
+
 def make_tier_executor(session: "GenerationSession", *, max_new: int = 16,
                        vocab_clip: Optional[int] = None) -> Callable:
-    """Adapt a GenerationSession into a Tier executor.
+    """Adapt a GenerationSession into a per-request Tier executor.
 
     Returns ``executor(tokens) -> (m_out, out_tokens)`` for 1-D int token
     arrays; ``vocab_clip`` guards against out-of-vocab ids when the
     request stream's tokenizer is larger than the serving model's.
+    ``m_out`` is the TRUE per-sequence output length (pre-EOS tokens) —
+    finished sequences no longer inflate M with post-EOS argmax junk.
     """
 
     def executor(tokens: np.ndarray):
         toks = np.asarray(tokens, np.int32)[None, :]
         if vocab_clip is not None:
             toks = np.minimum(toks, vocab_clip - 1)
-        out = session.generate(toks, max_new=max_new)
-        return int(out.shape[1]), out[0]
+        lens, out = session.generate_with_lengths(toks, max_new=max_new)
+        m = int(lens[0])
+        return m, out[0, :max(m, 1)]
+
+    return executor
+
+
+def make_batched_tier_executor(session: "GenerationSession", *,
+                               max_new: int = 16,
+                               vocab_clip: Optional[int] = None) -> Callable:
+    """Adapt a GenerationSession into a REAL batched Tier executor.
+
+    Returns ``executor(batch, lengths=None) -> [(m_out, tokens), ...]``:
+    ``batch`` is one drained :class:`TokenBatcher` padded token block
+    (b, width) — already length-bucketed by the batcher — and ``lengths``
+    the true per-request prompt lengths (derived from trailing PADs when
+    omitted).  One batched ``generate`` serves the whole batch; results
+    come back per sequence in row order, so the engine can account each
+    member of the batch individually.
+    """
+
+    def executor(batch: np.ndarray, lengths: Optional[Sequence[int]] = None):
+        toks = np.asarray(batch, np.int32)
+        if toks.ndim != 2:
+            raise ValueError("batched executor expects a (b, width) block")
+        if vocab_clip is not None:
+            toks = np.minimum(toks, vocab_clip - 1)
+        if lengths is None:
+            real = toks != PAD_ID
+            # width minus trailing pads; clamp to >= 1 for all-pad rows
+            trailing = np.where(real.any(1), np.argmax(real[:, ::-1], axis=1),
+                                toks.shape[1])
+            lens_in = np.maximum(toks.shape[1] - trailing, 1).astype(np.int32)
+        else:
+            lens_in = np.asarray(lengths, np.int32)
+        if session.supports_ragged or np.all(lens_in == toks.shape[1]):
+            m_out, out = session.generate_with_lengths(
+                toks, max_new=max_new, lengths=lens_in)
+            return [(int(m), out[i, :max(int(m), 1)])
+                    for i, m in enumerate(m_out)]
+        # recurrent-state plans can't take ragged right-padding: run one
+        # uniform (trimmed) sub-batch per distinct length instead
+        results: List[Optional[tuple]] = [None] * toks.shape[0]
+        for L in np.unique(lens_in):
+            rows = np.flatnonzero(lens_in == L)
+            m_out, out = session.generate_with_lengths(
+                toks[rows, :int(L)], max_new=max_new)
+            for j, r in enumerate(rows):
+                results[r] = (int(m_out[j]), out[j, :max(int(m_out[j]), 1)])
+        return results
 
     return executor
 
 
 class GenerationSession:
-    """Greedy batched generation on CPU (reduced configs)."""
+    """Greedy batched generation on CPU (reduced configs).
 
-    def __init__(self, model: LM, params, *, max_len: int = 64):
+    ``host_loop=True`` selects the per-token dispatch loop (the
+    paper-faithful, linear-in-M timing path); the default is the
+    compiled-scan fast path.  ``bucket_shapes=False`` disables the
+    length-bucket padding (every distinct input shape then compiles its
+    own executable, the seed behaviour).
+    """
+
+    def __init__(self, model: LM, params, *, max_len: int = 64,
+                 host_loop: bool = False, bucket_shapes: bool = True):
         self.model = model
         self.params = params
         self.max_len = max_len
+        self.host_loop = host_loop
+        self.bucket_shapes = bucket_shapes
         self._prefill = jax.jit(make_prefill_step(model, max_len=max_len))
         self._step = jax.jit(make_serve_step(model))
+        self._decode = jax.jit(self._decode_scan,
+                               static_argnames=("max_new",))
+        self._compiled_shapes: set = set()
+        self._ragged_ok = all(g.mixer in _POSITION_MASKED_MIXERS
+                              for g in model.cfg.layer_plan)
 
+    @property
+    def supports_ragged(self) -> bool:
+        """True when ragged right-padded prompts are exact for this plan
+        (every mixer's decode cache is position-masked per sequence)."""
+        return self._ragged_ok
+
+    # ------------------------------------------------------- scan decode --
+    def _decode_scan(self, params, state, tok0, max_new: int):
+        """All ``max_new`` decode steps in one lax.scan (the shared
+        :func:`~repro.nmt.common.scan_greedy_steps` body); done stays on
+        device.  Emits the EOS token itself (``keep_eos``), PAD-masks
+        everything after it, and counts pre-EOS tokens per sequence."""
+
+        def step(st, tok):                        # LM contract adapter
+            logits, st2 = self.model.decode_step(params, st, tok[:, None])
+            return st2, logits
+
+        return scan_greedy_steps(step, state, tok0[:, 0], tok0.shape[0],
+                                 max_new, keep_eos=True)
+
+    # ------------------------------------------------------------ public --
     def generate(self, tokens: np.ndarray, *, max_new: int = 16,
-                 frames: Optional[np.ndarray] = None) -> np.ndarray:
-        """tokens (B,S) int32 -> generated (B,<=max_new) (EOS-truncated)."""
+                 frames: Optional[np.ndarray] = None,
+                 lengths: Optional[Sequence[int]] = None) -> np.ndarray:
+        """tokens (B,S) int32 -> generated (B,<=max_new) int32.
+
+        Emitted rows end with EOS where the model produced one; positions
+        after it are PAD (they no longer carry post-EOS argmax junk).
+        Trailing all-PAD columns are trimmed (width >= 1 kept).
+        """
+        lens, out = self.generate_with_lengths(
+            tokens, max_new=max_new, frames=frames, lengths=lengths)
+        # lens counts pre-EOS tokens; +1 keeps the emitted EOS visible
+        width = int(min(max(int(lens.max()) + 1, 1), out.shape[1]))
+        return out[:, :width]
+
+    def generate_with_lengths(
+            self, tokens: np.ndarray, *, max_new: int = 16,
+            frames: Optional[np.ndarray] = None,
+            lengths: Optional[Sequence[int]] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """tokens (B,S) -> (lengths (B,), tokens (B,max_new)).
+
+        ``lengths`` out counts each sequence's PRE-EOS tokens (the
+        paper's M); the token block is PAD-masked after each EOS.
+        ``lengths`` in marks true prompt lengths in a right-padded batch
+        (position-masked mixer plans only).
+        """
+        tokens = np.asarray(tokens, np.int32)
         b, s = tokens.shape
         if s + max_new > self.max_len:
             raise ValueError("exceeds session capacity")
+        lens_in = (None if lengths is None
+                   else np.asarray(lengths, np.int32))
+        if lens_in is not None and not self._ragged_ok:
+            if np.all(lens_in == s):
+                lens_in = None           # uniform full-width: nothing ragged
+            else:
+                raise ValueError(
+                    "ragged prompt lengths need position-masked mixers "
+                    f"(plan has {[g.mixer for g in self.model.cfg.layer_plan]})")
+        if self.bucket_shapes and frames is None:
+            tokens, lens_in = self._bucket_pad(tokens, lens_in, max_new)
+
         args = (self.params, jnp.asarray(tokens))
-        logits, state = (self._prefill(*args, jnp.asarray(frames))
-                         if frames is not None else self._prefill(*args))
-        out = []
-        done = np.zeros((b,), bool)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        if frames is not None:
+            logits, state = self._prefill(*args, None, jnp.asarray(frames))
+        elif lens_in is not None:
+            logits, state = self._prefill(*args, jnp.asarray(lens_in))
+        else:
+            logits, state = self._prefill(*args)
+        tok0 = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+
+        if self.host_loop:
+            lens_out, out = self._host_decode(state, tok0, max_new)
+        else:
+            lens_out, out = self._decode(self.params, state, tok0,
+                                         max_new=max_new)
+        return (np.asarray(lens_out, np.int32)[:b],
+                np.asarray(out, np.int32)[:b])
+
+    # ------------------------------------------------------------ helpers --
+    def _bucket_pad(self, tokens, lens_in, max_new):
+        """Pad (b, s) up to the shape bucket; returns (tokens, lengths)."""
+        b, s = tokens.shape
+        bb = _next_pow2(b)
+        if self._ragged_ok:
+            sb = min(_next_pow2(s, floor=8), self.max_len - max_new)
+            sb = max(sb, s)
+            if lens_in is None:
+                lens_in = np.full((b,), s, np.int32)
+        else:
+            sb = s                       # recurrent state: exact width only
+        if (bb, sb) != (b, s):
+            padded = np.full((bb, sb), PAD_ID, np.int32)
+            padded[:b, :s] = tokens
+            tokens = padded
+            if lens_in is not None:
+                lens_in = np.concatenate(
+                    [lens_in, np.ones((bb - b,), np.int32)])
+        key = (bb, sb, max_new)
+        if key not in self._compiled_shapes:
+            self._compiled_shapes.add(key)
+            _LOG.warning("GenerationSession: compiling new shape "
+                         "batch=%d width=%d max_new=%d", bb, sb, max_new)
+        return tokens, lens_in
+
+    def _host_decode(self, state, tok0, max_new: int):
+        """Per-token dispatch loop (timing path).  ``done`` stays on
+        device; the early-exit check syncs ONE scalar per step instead of
+        transferring the token block."""
+        tok = tok0
+        done = jnp.zeros((tok0.shape[0],), bool)
+        emitted = []
+        lens = jnp.zeros((tok0.shape[0],), jnp.int32)
         for _ in range(max_new):
-            out.append(np.asarray(tok)[:, 0])
-            done |= out[-1] == EOS_ID
-            if done.all():
+            t = tok[:, 0]
+            emitted.append(jnp.where(done, PAD_ID, t))
+            lens = lens + (~done & (t != EOS_ID)).astype(jnp.int32)
+            done = done | (t == EOS_ID)
+            if bool(done.all()):                  # one scalar sync per step
                 break
             logits, state = self._step(self.params, state, tok)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        return np.stack(out, axis=1)
+        out = jnp.stack(emitted, axis=1)
+        if out.shape[1] < max_new:                # match scan-path width
+            out = jnp.pad(out, ((0, 0), (0, max_new - out.shape[1])),
+                          constant_values=PAD_ID)
+        return lens, out

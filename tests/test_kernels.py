@@ -37,6 +37,51 @@ def test_flash_attention_matches_ref(b, s, h, hkv, d, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_length_masking_matches_ref(causal):
+    """Per-sequence valid-key prefixes (ragged padded batches) — the
+    batched Marian encoder/teacher path contract, padded rows included."""
+    b, s, h, d = 3, 96, 4, 32
+    ks = jax.random.split(KEY(11), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    lens = jnp.asarray([96, 40, 1], jnp.int32)
+    out = ops.flash_attention(q, k, v, lens, causal=causal, block_q=32,
+                              block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, lengths=lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_length_equals_full_is_identity():
+    """lengths = T must agree with the no-lengths call bit-for-bit."""
+    ks = jax.random.split(KEY(12), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    a = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                            interpret=True)
+    b = ops.flash_attention(q, k, v, jnp.full((2,), 64, jnp.int32),
+                            causal=True, block_q=32, block_k=32,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flash_attention_length_one_attends_single_key():
+    """length=1, non-causal: every query row reduces to v[:, 0]."""
+    ks = jax.random.split(KEY(13), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    out = ops.flash_attention(q, k, v, jnp.asarray([1], jnp.int32),
+                              causal=False, block_q=32, block_k=32,
+                              interpret=True)
+    want = jnp.broadcast_to(v[:, 0][:, None], out.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_flash_attention_noncausal():
     ks = jax.random.split(KEY(1), 3)
     q = jax.random.normal(ks[0], (1, 64, 2, 32))

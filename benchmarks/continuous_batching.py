@@ -1,0 +1,250 @@
+"""Continuous in-flight batching vs block-to-completion serving.
+
+PR 3's batched tiers drain length-bucketed blocks that run to
+completion: one long sequence holds its whole block hostage, and every
+short member inherits the straggler's latency — the bubble the
+end-cloud pipelining literature attacks.  PR 6 removes the barrier
+(ROADMAP item 1): finished rows evict between decode steps and queued
+requests prefill into the freed slots of the live batch.
+
+Two sections:
+
+* ``run_des`` — the headline sweep, Poisson rate x max slots on the
+  deterministic DES: the SAME stream served by a ``SimTier`` in
+  block mode (``continuous=False``, the PR 3 model) and in continuous
+  mode (``continuous=True``, one slot per sequence, independent
+  finishes).  A tight SLO relative to the straggler barrier makes the
+  block penalty visible at every load: short requests miss their
+  deadline purely by waiting for batch-max.  At the highest swept rate
+  continuous mode must strictly improve BOTH p95 latency and SLO
+  attainment for every slot count (checked, hard failure on regression).
+* ``run_real`` — real execution: a smoke-scale LM behind
+  ``CollaborativeEngine.serve_continuous`` with a
+  ``ContinuousGenerationSession``, the same virtual arrival schedule
+  served with ``refill=True`` (continuous) and ``refill=False``
+  (block-to-completion).  Latencies are measured decode wall-clock laid
+  onto the virtual arrivals (shapes warmed first); reported for the
+  bench trail, not gated — CI machines jitter.
+
+Emits ``BENCH_continuous.json`` (``--json``) with both sections so CI
+archives the comparison alongside ``BENCH_decode.json``.
+
+Run: PYTHONPATH=src python benchmarks/continuous_batching.py [--smoke]
+     [--json BENCH_continuous.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import LinearN2M, prefilter_pairs
+from repro.core.scheduler import MultiTierScheduler, SchedTier
+from repro.core.simulator import SimTier, make_poisson_stream, simulate_des
+from repro.data.synthetic import make_corpus
+
+# service dominated by output length M (the paper's §II-A linearity) so
+# the corpus' M spread produces real stragglers inside a block
+_POD = DeviceProfile("pod", LinearLatencyModel(2e-5, 2e-3, 1e-3), 0.05)
+_OVERHEAD_S = 1e-3
+_SEED = 17
+
+
+def _scheduler(n2m: LinearN2M, slots: int) -> MultiTierScheduler:
+    return MultiTierScheduler(
+        [SchedTier("pod", dataclasses.replace(_POD.model), None,
+                   batch_size=slots, per_seq_overhead_s=_OVERHEAD_S)],
+        dataclasses.replace(n2m))
+
+
+def run_des(n_requests: int = 8000, rates=(30.0, 60.0, 100.0),
+            slot_counts=(8, 16), slo_s: float = 0.1,
+            verbose: bool = True, check: bool = True):
+    """Poisson rate x max-slots sweep, block vs continuous on one tier.
+
+    Returns ``(rows, csv)``; ``rows[(rate, slots, mode)]`` is the DES
+    summary dict.  With ``check=True`` the highest swept rate must show
+    continuous strictly improving p95 AND SLO attainment over block for
+    every slot count — the PR 6 acceptance bar.
+    """
+    corpus = make_corpus("de-en", n_requests + 2000, seed=_SEED)
+    fit, eval_ = corpus.split(2000)
+    nf, mf = prefilter_pairs(fit.n, fit.m_real)
+    n2m = LinearN2M().fit(nf, mf)
+
+    rows = {}
+    csv = []
+    for rate in rates:
+        for slots in slot_counts:
+            for cont in (False, True):
+                stream = make_poisson_stream(
+                    eval_.n, eval_.m_out, eval_.m_real,
+                    rate_hz=rate, seed=_SEED, slo_s=slo_s)
+                tiers = [SimTier("pod", _POD, servers=1,
+                                 queue_capacity=256, batch_size=slots,
+                                 per_seq_overhead_s=_OVERHEAD_S,
+                                 continuous=cont)]
+                res = simulate_des(_scheduler(n2m, slots), stream, tiers,
+                                   seed=_SEED)
+                mode = "cont" if cont else "block"
+                s = res.summary()
+                rows[(rate, slots, mode)] = s
+                csv.append(
+                    f"continuous_rate{rate:g}_s{slots}_{mode},"
+                    f"{s['mean_latency_s']*1e6:.1f},"
+                    f"p95={s['p95_latency_s']*1e3:.1f}ms"
+                    f"|slo={s['slo_attainment']:.3f}"
+                    f"|shed={int(s['shed'])}")
+            bl = rows[(rate, slots, "block")]
+            co = rows[(rate, slots, "cont")]
+            if verbose:
+                print(f"[continuous] rate={rate:6.1f}/s slots={slots:<3d} "
+                      f"block p95={bl['p95_latency_s']*1e3:7.1f}ms "
+                      f"slo={bl['slo_attainment']:.3f}  ->  "
+                      f"cont p95={co['p95_latency_s']*1e3:7.1f}ms "
+                      f"slo={co['slo_attainment']:.3f}")
+
+    top = max(rates)
+    for slots in slot_counts:
+        bl = rows[(top, slots, "block")]
+        co = rows[(top, slots, "cont")]
+        ok = (co["p95_latency_s"] < bl["p95_latency_s"]
+              and co["slo_attainment"] > bl["slo_attainment"])
+        msg = (f"[continuous] headline rate={top:g}/s slots={slots}: "
+               f"p95 {bl['p95_latency_s']*1e3:.1f}->"
+               f"{co['p95_latency_s']*1e3:.1f}ms, "
+               f"slo {bl['slo_attainment']:.3f}->"
+               f"{co['slo_attainment']:.3f}  "
+               f"{'WIN' if ok else 'REGRESSION'}")
+        if verbose:
+            print(msg)
+        if check and not ok:
+            raise AssertionError(msg)
+    return rows, csv
+
+
+def run_real(n_requests: int = 24, max_slots: int = 4, max_new: int = 12,
+             rate_hz: float = 30.0, slo_s: float = 1.0,
+             verbose: bool = True):
+    """Real-execution comparison on a smoke-scale LM.
+
+    The same virtual Poisson arrival schedule is served twice by
+    ``serve_continuous`` — ``refill=True`` (slot table refilled between
+    steps) vs ``refill=False`` (block-to-completion) — on fresh
+    sessions over the same params.  Sessions are warmed (all admission
+    shapes compiled) before measuring, so virtual-time latencies are
+    decode wall-clock, not compile time.
+    """
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models.model import LM
+    from repro.runtime.engine import CollaborativeEngine, Tier
+    from repro.runtime.serving import ContinuousGenerationSession
+
+    cfg = smoke_config("qwen3-8b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(_SEED)
+    prompts = [rng.integers(3, cfg.vocab_size,
+                            size=int(rng.integers(2, 12))).astype(np.int32)
+               for _ in range(n_requests)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    prof = DeviceProfile("npu", LinearLatencyModel(0.0, 0.0, 0.01), 0.0)
+
+    rows = {}
+    for refill in (False, True):
+        session = ContinuousGenerationSession(
+            model, params, max_slots=max_slots,
+            max_len=max(len(p) for p in prompts) + max_new + 8)
+        # warm every admission shape the run will see, then reset the
+        # table (compiled shapes survive the reset)
+        session.serve(prompts, max_new=max_new, refill=refill)
+        session.reset()
+        eng = CollaborativeEngine(
+            n2m=LinearN2M(1.0, 0.0),
+            tiers=[Tier(prof, name="npu", servers=1, queue_capacity=256,
+                        batch_size=max_slots,
+                        continuous_session=session)],
+            seed=_SEED)
+        res = eng.serve_continuous(prompts, arrival_s=arrivals,
+                                   deadline_s=slo_s, max_new=max_new,
+                                   refill=refill)
+        lat = np.array([r.latency_s for r in res if not r.shed])
+        mode = "cont" if refill else "block"
+        rows[mode] = {
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "slo_attainment": eng.stats()["slo_attainment"],
+            "shed": int(sum(r.shed for r in res)),
+            "steps": session.n_steps,
+            "prefills": session.n_prefills,
+        }
+        if verbose:
+            s = rows[mode]
+            print(f"[continuous-real] {mode:5s} "
+                  f"p50={s['p50_latency_s']*1e3:7.1f}ms "
+                  f"p95={s['p95_latency_s']*1e3:7.1f}ms "
+                  f"slo={s['slo_attainment']:.3f} "
+                  f"steps={s['steps']} prefills={s['prefills']}")
+    csv = [f"continuous_real_{mode},{s['p50_latency_s']*1e6:.1f},"
+           f"p95={s['p95_latency_s']*1e3:.1f}ms|slo={s['slo_attainment']:.3f}"
+           for mode, s in rows.items()]
+    return rows, csv
+
+
+def run(n_requests: int = 8000, rates=(30.0, 60.0, 100.0),
+        slot_counts=(8, 16), slo_s: float = 0.1, real: bool = True,
+        verbose: bool = True, out_json: str | None = None):
+    des_rows, csv = run_des(n_requests=n_requests, rates=rates,
+                            slot_counts=slot_counts, slo_s=slo_s,
+                            verbose=verbose)
+    real_rows = {}
+    if real:
+        real_rows, real_csv = run_real(verbose=verbose)
+        csv = csv + real_csv
+
+    if out_json:
+        top = max(rates)
+        payload = {
+            "des": [{"rate_hz": r, "slots": s, "mode": m, **row}
+                    for (r, s, m), row in des_rows.items()],
+            "headline": {
+                "rate_hz": top,
+                "slo_s": slo_s,
+                "per_slots": {
+                    str(s): {
+                        "block_p95_ms":
+                            des_rows[(top, s, "block")]["p95_latency_s"] * 1e3,
+                        "cont_p95_ms":
+                            des_rows[(top, s, "cont")]["p95_latency_s"] * 1e3,
+                        "block_slo":
+                            des_rows[(top, s, "block")]["slo_attainment"],
+                        "cont_slo":
+                            des_rows[(top, s, "cont")]["slo_attainment"],
+                    } for s in slot_counts},
+            },
+            "real": real_rows,
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        if verbose:
+            print(f"[continuous] wrote {out_json}")
+    return {"des": des_rows, "real": real_rows}, csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI invocation (small request counts)")
+    ap.add_argument("--json", default=None, help="dump results JSON here")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_requests=3000, rates=(30.0, 100.0), slot_counts=(8,),
+            out_json=args.json)
+    else:
+        run(out_json=args.json)

@@ -10,6 +10,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
                plus a batch-size x rate sweep with SLO-deadline shedding
   decode     — compiled-scan batched decode vs per-sequence host loop
                (tokens/sec + p50 step latency, batch x src_len sweep)
+  continuous — continuous in-flight batching vs block-to-completion
+               (DES rate x slots sweep + real slot-table execution)
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -53,6 +55,15 @@ def main() -> None:
     _, csv = multitier.run(n_requests=min(n_req, 20_000))
     csv_all += csv
     _, csv = multitier.run_batched(n_requests=min(n_req, 20_000))
+    csv_all += csv
+
+    from benchmarks import continuous_batching
+    if fast:
+        _, csv = continuous_batching.run(
+            n_requests=3000, rates=(30.0, 100.0), slot_counts=(8,),
+            out_json="BENCH_continuous.json")
+    else:
+        _, csv = continuous_batching.run(out_json="BENCH_continuous.json")
     csv_all += csv
 
     from benchmarks import decode_throughput

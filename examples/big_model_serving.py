@@ -7,8 +7,10 @@ request stream through the C-NMT engine with the big model as the cloud
 tier and rwkv6-family (O(1)-state decode) as the edge tier.
 
 Run:  PYTHONPATH=src python examples/big_model_serving.py
+(REPRO_SMOKE=1 shrinks the routed stream for the examples smoke test.)
 """
 
+import os
 import time
 
 import jax
@@ -21,6 +23,9 @@ from repro.core.profiles import make_profile
 from repro.models.model import LM
 from repro.runtime.engine import CollaborativeEngine, Tier
 from repro.runtime.serving import GenerationSession
+
+SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
+N_REQ = 6 if SMOKE else 20
 
 print("== batched serving with the big-model runtime (smoke scale) ==")
 cfg = smoke_config("qwen3-8b")
@@ -59,10 +64,10 @@ engine = CollaborativeEngine(
     cloud=Tier(DeviceProfile("pod-qwen", LinearLatencyModel(2e-5, 4e-4, 0.002))),
     n2m=LinearN2M(0.7, 1.0), rtt_fn=profile.rtt_at, seed=0)
 
-for i in range(20):
+for i in range(N_REQ):
     n_len = int(rng.integers(4, 40))
     engine.submit(rng.integers(4, 256, (n_len,)).astype(np.int32),
                   now_s=float(i))
 s = engine.stats()
-print(f"  20 requests: mean {s['mean_latency_s']*1e3:.1f}ms, "
+print(f"  {N_REQ} requests: mean {s['mean_latency_s']*1e3:.1f}ms, "
       f"offloaded {s['offload_frac']*100:.0f}% to the pod tier")

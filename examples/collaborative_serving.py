@@ -7,8 +7,10 @@ trace.  200 requests stream through the CollaborativeEngine; compare
 total latency against always-edge / always-cloud.
 
 Run:  PYTHONPATH=src python examples/collaborative_serving.py
+(REPRO_SMOKE=1 shrinks the request stream for the examples smoke test.)
 """
 
+import os
 import time
 
 import jax
@@ -20,6 +22,9 @@ from repro.core.profiles import make_profile
 from repro.data.synthetic import LANGUAGE_PAIRS, make_corpus
 from repro.nmt import make_paper_model
 from repro.runtime.engine import CollaborativeEngine, Tier
+
+SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
+N_REQ = 30 if SMOKE else 200
 
 print("== calibrating the edge model (real measurements) ==")
 model, pair = make_paper_model("de-en", scale=0.15, vocab=1000,
@@ -51,9 +56,9 @@ engine = CollaborativeEngine(
     cloud=Tier(cloud_prof),            # modelled (as the paper simulates)
     n2m=n2m, rtt_fn=lambda t: float(profile.rtt_at(t)) * 0.2, seed=0)
 
-print("== streaming 200 requests through the gateway ==")
+print(f"== streaming {N_REQ} requests through the gateway ==")
 t0 = time.perf_counter()
-for i in range(200):
+for i in range(N_REQ):
     engine.submit(eval_.src[i][:64], now_s=i * 0.5)
 stats = engine.stats()
 wall = time.perf_counter() - t0

@@ -13,8 +13,10 @@ engine sheds what no tier can finish in time instead of letting the
 queues poison every later request, and stats() reports SLO attainment.
 
 Run:  PYTHONPATH=src python examples/multitier_serving.py
+(REPRO_SMOKE=1 shrinks both request streams for the examples smoke test.)
 """
 
+import os
 import time
 
 import jax
@@ -27,6 +29,11 @@ from repro.core.profiles import make_profile
 from repro.data.synthetic import make_corpus
 from repro.nmt import make_paper_model
 from repro.runtime.engine import CollaborativeEngine, Tier
+
+SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
+N_REQ = 60 if SMOKE else 300          # main stream length
+BURST_AT = N_REQ // 2                 # 10 back-to-back arrivals start here
+N_SLO = 40 if SMOKE else 200          # overload-burst length
 
 print("== calibrating the edge model (real measurements) ==")
 model, pair = make_paper_model("de-en", scale=0.15, vocab=1000,
@@ -60,11 +67,12 @@ engine = CollaborativeEngine(
     ],
     n2m=n2m, seed=0, refit_interval=100)
 
-print("== streaming 300 requests (burst at t=60s) ==")
+print(f"== streaming {N_REQ} requests (mid-run burst) ==")
 t0 = time.perf_counter()
-for i in range(300):
+for i in range(N_REQ):
     # a burst of 10 back-to-back arrivals mid-run saturates the gateway
-    now = 60.0 + (i - 120) * 0.005 if 120 <= i < 130 else i * 0.5
+    now = BURST_AT * 0.5 + (i - BURST_AT) * 0.005 \
+        if BURST_AT <= i < BURST_AT + 10 else i * 0.5
     engine.submit(eval_.src[i][:64], now_s=now)
 wall = time.perf_counter() - t0
 s = engine.stats()
@@ -73,7 +81,7 @@ print(f"  mean latency {s['mean_latency_s']*1e3:.1f}ms  "
       f"p95 {s['p95_latency_s']*1e3:.1f}ms  "
       f"mean wait {s['mean_wait_s']*1e3:.2f}ms  (wall {wall:.1f}s)")
 print(f"  routed: {frac}")
-burst = [r for r in engine.results if 120 <= r.req_id < 130]
+burst = [r for r in engine.results if BURST_AT <= r.req_id < BURST_AT + 10]
 print(f"  burst tiers: {[r.tier_name for r in burst]}")
 print(f"  tx estimate now: {s['tx_estimate_s']*1e3:.1f}ms, "
       f"refits: {engine.calibrator.n_refits}")
@@ -81,7 +89,8 @@ print(f"  tx estimate now: {s['tx_estimate_s']*1e3:.1f}ms, "
 print("== Poisson overload burst with an 80 ms SLO (deadline shedding) ==")
 rate = 10_000.0
 rng = np.random.default_rng(5)
-t_burst = 200.0 + np.cumsum(rng.exponential(1 / rate, size=200))
+t_burst = N_REQ * 0.5 + 50.0 + np.cumsum(
+    rng.exponential(1 / rate, size=N_SLO))
 slo_results = []
 for j, now in enumerate(t_burst):
     slo_results.append(engine.submit(eval_.src[100 + j % 200][:64],

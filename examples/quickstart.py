@@ -6,7 +6,10 @@ CI decision rule routing requests between an edge gateway and a cloud
 server over a time-varying connection.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(REPRO_SMOKE=1 shrinks the corpus for the examples smoke test.)
 """
+
+import os
 
 import numpy as np
 
@@ -21,8 +24,10 @@ from repro.core import (
 from repro.core.profiles import make_profile
 from repro.data.synthetic import make_corpus
 
+SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
+
 # 1. fit the N->M length regressor on (pre-filtered) corpus pairs
-corpus = make_corpus("en-zh", 20_000, seed=0)
+corpus = make_corpus("en-zh", 2000 if SMOKE else 20_000, seed=0)
 n, m = prefilter_pairs(corpus.n, corpus.m_real)
 n2m = LinearN2M().fit(n, m)
 print(f"N->M fit: gamma={n2m.gamma:.3f} delta={n2m.delta:.2f} "

@@ -5,9 +5,11 @@ checkpointing.  Loss is expected to drop steeply as the model learns the
 corpus statistics (it is synthetic, but the machinery is the real one).
 
 Run:  PYTHONPATH=src python examples/train_nmt.py [--steps 200]
+(REPRO_SMOKE=1 defaults to a 60-step run for the examples smoke test.)
 """
 
 import argparse
+import os
 import time
 
 import jax
@@ -28,8 +30,9 @@ from repro.training.optimizer import (
 
 
 def main():
+    smoke = bool(int(os.environ.get("REPRO_SMOKE", "0")))
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=60 if smoke else 200)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--ckpt", default="/tmp/repro_nmt_ckpt.npz")
     args = ap.parse_args()

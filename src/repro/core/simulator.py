@@ -45,6 +45,19 @@ members start and finish together.  ``batch_size=1`` takes the exact
 PR-1 single-request code path, so the zero-load DES≡analytic invariant
 is untouched.
 
+CONTINUOUS in-flight batching (``SimTier(continuous=True)``): the
+block-to-completion barrier goes away — each server becomes
+``batch_size`` SLOTS, a request occupies one slot for
+
+    T_i = T_exe,true(N_i, M_i) + per_seq_overhead_s * (slots live at start)
+
+and finishes *independently* (its own finish event frees the slot for
+the next FIFO request immediately), mirroring
+:meth:`~repro.runtime.engine.CollaborativeEngine.serve_continuous`'s
+slot table.  At zero load no slot neighbours exist, so the duration is
+exactly the solo draw — the zero-load DES≡analytic invariant holds for
+continuous tiers too.
+
 Deadline-aware admission (SLO): ``RequestStream.slo_s`` optionally
 attaches a relative deadline to each request (``inf`` = none).  A
 request whose preferred tier is full is re-routed to the cheapest tier
@@ -326,6 +339,12 @@ class SimTier:
     is  max over members of the solo execution draw plus
     ``per_seq_overhead_s`` per extra member — all members finish
     together.  ``batch_size=1`` is the exact unbatched PR-1 station.
+
+    ``continuous=True`` removes the block-to-completion barrier: each
+    server is ``batch_size`` independent SLOTS, a request occupies one
+    slot for its solo draw plus ``per_seq_overhead_s`` per slot live at
+    its start, and frees the slot the moment it finishes (FIFO refill) —
+    the DES twin of the engine's ``serve_continuous`` slot table.
     """
 
     name: str
@@ -336,6 +355,7 @@ class SimTier:
     batch_size: int = 1
     per_seq_overhead_s: float = 0.0
     max_batch_tokens: Optional[int] = None
+    continuous: bool = False
 
     def __post_init__(self):
         if self.servers < 1:
@@ -344,6 +364,9 @@ class SimTier:
             raise ValueError("batch_size must be >= 1")
         if self.per_seq_overhead_s < 0:
             raise ValueError("per_seq_overhead_s must be >= 0")
+        if self.continuous and self.max_batch_tokens is not None:
+            raise ValueError("continuous tiers admit per-slot, not "
+                             "per-token-budget batches")
 
 
 @dataclasses.dataclass
@@ -488,14 +511,17 @@ def simulate_des(
 
     m_hats = m_hats_vec()
 
-    # per-tier station state
+    # per-tier station state; a continuous tier's concurrency unit is a
+    # SLOT (servers x batch_size of them), a batched tier's is a server
     busy = [0] * k_tiers
+    slots = [t.servers * t.batch_size if t.continuous else t.servers
+             for t in tiers]
     queues: List[List[int]] = [[] for _ in range(k_tiers)]
     qhead = [0] * k_tiers                 # pop index (amortized O(1) FIFO)
     batchers = [TokenBatcher(max_batch=t.batch_size,
                              max_tokens_per_batch=t.max_batch_tokens
                              if t.max_batch_tokens is not None else 1 << 40)
-                if t.batch_size > 1 else None
+                if t.batch_size > 1 and not t.continuous else None
                 for t in tiers]
     pred_backlog = np.zeros(k_tiers)      # scheduler-predicted work in system
     in_system = [0] * k_tiers             # admitted-but-unfinished count
@@ -516,10 +542,16 @@ def simulate_des(
 
     def start(i: int, k: int, now: float) -> None:
         nonlocal seq
+        # continuous slot admission: the solo draw pays the per-sequence
+        # overhead once per slot already live at its start (zero at zero
+        # load, so the solo path stays bit-for-bit)
+        dur = float(true_exec[k][i]) \
+            + (tiers[k].per_seq_overhead_s * busy[k]
+               if tiers[k].continuous else 0.0)
         busy[k] += 1
         t_start[i] = now
-        exec_used[i] = float(true_exec[k][i])
-        fin = now + float(true_exec[k][i])
+        exec_used[i] = dur
+        fin = now + dur
         heapq.heappush(heap, (fin, seq, _FINISH, k))
         seq += 1
         finish_req[(fin, seq - 1)] = i
@@ -555,14 +587,14 @@ def simulate_des(
 
     def has_space(k: int) -> bool:
         cap = tiers[k].queue_capacity
-        return cap is None or waiting(k) < cap or busy[k] < tiers[k].servers
+        return cap is None or waiting(k) < cap or busy[k] < slots[k]
 
     def drain(k: int, now: float) -> None:
         """Fill freed servers of tier k from its waiting line, shedding
         queued requests whose deadline already expired (they would
         certainly miss; dropping them protects the rest)."""
         if batchers[k] is not None:
-            while busy[k] < tiers[k].servers and len(batchers[k]) > 0:
+            while busy[k] < slots[k] and len(batchers[k]) > 0:
                 ids, _ = batchers[k].next_batch_ids()
                 if deadline_abs is not None:
                     live = [i for i in ids if deadline_abs[i] >= now]
@@ -573,7 +605,7 @@ def simulate_des(
                 if ids:
                     start_batch(ids, k, now)
         else:
-            while busy[k] < tiers[k].servers and waiting(k) > 0:
+            while busy[k] < slots[k] and waiting(k) > 0:
                 j = queues[k][qhead[k]]
                 qhead[k] += 1
                 if qhead[k] > 1024 and qhead[k] * 2 > len(queues[k]):
@@ -629,7 +661,7 @@ def simulate_des(
             in_system[k] += 1
             if events is not None:
                 events.append((now, "arrival", i, k))
-            if busy[k] < tiers[k].servers:
+            if busy[k] < slots[k]:
                 if batchers[k] is not None:
                     start_batch([i], k, now)
                 else:

@@ -190,6 +190,31 @@ def greedy_decode(decode_step, init_state, max_len: int,
     return len(out), jnp.asarray(out, jnp.int32)
 
 
+def greedy_update(tok, done, *, keep_eos: bool = False,
+                  forced: bool = False):
+    """ONE emission step of the greedy EOS bookkeeping.
+
+    ``tok`` (B,) is the carried token about to be emitted, ``done`` (B,)
+    the rows already past their EOS.  Returns ``(emit, live, done2)``:
+    the PAD-masked emission, the rows that emitted a real pre-EOS token
+    this step (what ``lengths`` counts), and the updated done mask.
+
+    This is the single source of truth for the EOS/done semantics —
+    :func:`scan_greedy_steps` applies it inside its scan body and the
+    continuous slot-table session
+    (:class:`repro.runtime.serving.ContinuousGenerationSession`) applies
+    it once per in-flight step, so block and continuous decode cannot
+    drift apart.
+    """
+    if forced:
+        return tok, jnp.ones(tok.shape, bool), done
+    is_eos = tok == EOS_ID
+    live = ~(done | is_eos)                  # emits a real token now
+    emit = (jnp.where(done, PAD_ID, tok) if keep_eos
+            else jnp.where(live, tok, PAD_ID))
+    return emit, live, done | is_eos
+
+
 def scan_greedy_steps(decode_step, state, token0, batch: int, steps: int, *,
                       keep_eos: bool = False, forced: bool = False):
     """The shared compiled greedy-decode scan body.
@@ -215,14 +240,8 @@ def scan_greedy_steps(decode_step, state, token0, batch: int, steps: int, *,
 
     def step(carry, _):
         state, tok, done = carry
-        if forced:
-            emit, live, done2 = tok, jnp.ones((batch,), bool), done
-        else:
-            is_eos = tok == EOS_ID
-            live = ~(done | is_eos)              # emits a real token now
-            emit = (jnp.where(done, PAD_ID, tok) if keep_eos
-                    else jnp.where(live, tok, PAD_ID))
-            done2 = done | is_eos
+        emit, live, done2 = greedy_update(tok, done, keep_eos=keep_eos,
+                                          forced=forced)
         state, logits = decode_step(state, tok)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return (state, nxt, done2), (emit, live)

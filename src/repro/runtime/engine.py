@@ -48,6 +48,20 @@ compiled-scan decode path), and every member gets its own
 execution finally matches the batch-aware occupancy accounting instead
 of only being modelled by it.
 
+CONTINUOUS in-flight batching: a tier carrying a ``continuous_session``
+(:class:`~repro.runtime.serving.ContinuousGenerationSession`) serves
+:meth:`CollaborativeEngine.serve_continuous` — an event loop over a
+virtual arrival schedule where the batch is re-formed BETWEEN decode
+steps: finished rows evict and free their slot immediately, and queued
+requests prefill into the freed slots of the live batch (EDF across
+deadline values, FIFO within a deadline class).  Admission reuses the
+same deadline-aware shed/reroute rule as ``submit`` with slot-table
+space standing in for server space; each tier's virtual clock advances
+by its *measured* prefill/step wall time, so reported latencies are
+real compute under the modelled arrival process.  ``refill=False``
+degenerates to PR 3 block-to-completion scheduling (admit only into an
+empty table) — the baseline the continuous benchmark compares against.
+
 Deadline-aware admission (SLO): ``submit(..., deadline_s=...)`` attaches
 a relative deadline.  When the chosen tier is full the engine re-routes
 to the cheapest tier with space whose predicted total meets the
@@ -60,8 +74,10 @@ the latency percentiles.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import math
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -112,6 +128,9 @@ class Tier:
     batch_size: int = 1
     per_seq_overhead_s: float = 0.0
     batched_executor: Optional[Callable] = None   # (block, lengths) -> [...]
+    # ContinuousGenerationSession — marks the tier for serve_continuous's
+    # in-flight batching (slot-table space replaces server space there)
+    continuous_session: Optional[object] = None
 
     def __post_init__(self):
         if self.name is None:
@@ -470,9 +489,160 @@ class CollaborativeEngine:
                         service_s, now, deadline_s)
         return results
 
+    # ---------------------------------------------------- serve_continuous --
+    def serve_continuous(self, requests: Sequence[np.ndarray], *,
+                         arrival_s: Optional[Sequence[float]] = None,
+                         deadline_s: Union[None, float,
+                                           Sequence[Optional[float]]] = None,
+                         max_new: int = 16,
+                         refill: bool = True) -> List[RequestResult]:
+        """Serve a virtual arrival schedule with CONTINUOUS in-flight
+        batching on every tier that carries a ``continuous_session``.
+
+        The event loop interleaves three things per tier step:
+
+        1. requests whose ``arrival_s`` has passed are routed
+           (``scheduler.decide`` with live backlog estimates) and admitted
+           under the same deadline-aware shed/reroute rule as ``submit``
+           — slot-table space (free slots, then the bounded wait queue)
+           standing in for server space;
+        2. freed slots are refilled from the tier's wait queue — EDF
+           across deadline values, FIFO within a deadline class — by
+           prefilling the dequeued prompts INTO the live batch;
+        3. one decode step runs over the whole slot table; rows that
+           finish evict and complete at the tier's clock.
+
+        Each continuous tier's virtual clock advances by its *measured*
+        prefill/step wall-clock, so latencies are real compute laid onto
+        the modelled arrival process (warm the session's shapes first
+        when benchmarking — compiles are billed to the requests that
+        trigger them).  Tiers without a session serve routed requests
+        through the usual virtual-time path, so mixed fleets work.
+
+        ``refill=False`` is the PR 3 block-to-completion baseline: a
+        tier admits only into an EMPTY table, and the block runs until
+        every member finished.  ``deadline_s`` is a scalar applied to all
+        requests or a per-request sequence.  Results come back in request
+        order; shed requests carry a shed record (``shed=True``).
+        """
+        sessions = {k: t.continuous_session
+                    for k, t in enumerate(self.tiers)
+                    if t.continuous_session is not None}
+        if not sessions:
+            raise ValueError("serve_continuous needs at least one tier "
+                             "with a continuous_session")
+        n_req = len(requests)
+        if arrival_s is None:
+            arrival_s = [0.0] * n_req
+        if deadline_s is None or isinstance(deadline_s, (int, float)):
+            deadlines = [deadline_s] * n_req
+        else:
+            deadlines = list(deadline_s)
+        order = sorted(range(n_req), key=lambda i: (arrival_s[i], i))
+        results: List[Optional[RequestResult]] = [None] * n_req
+        # per-tier wait queue: (deadline-class key, fifo seq, req, ...)
+        queues: Dict[int, list] = {k: [] for k in sessions}
+        tclock = {k: 0.0 for k in sessions}   # tier virtual clock
+        svc_ewma = {k: 0.0 for k in sessions}
+        inflight: Dict[int, tuple] = {}       # req -> (k, d, n, arr, dl, t_admit)
+        seq = 0
+        ptr = 0
+        now = 0.0
+
+        def queue_est(k: int) -> float:
+            if k not in sessions:
+                return self._occ[k].queue_delay(now)
+            s = sessions[k]
+            if s.free_slots > len(queues[k]):
+                return max(tclock[k] - now, 0.0)
+            waves = 1 + len(queues[k]) // max(s.max_slots, 1)
+            return max(tclock[k] - now, 0.0) + svc_ewma[k] * waves
+
+        def drain(k: int) -> None:
+            """Refill free slots of tier k from its wait queue, then run
+            one decode step; completions land at the advanced clock."""
+            s = sessions[k]
+            if queues[k] and (refill or s.live_count == 0):
+                take = min(s.free_slots, len(queues[k]))
+                if take:
+                    wave = [heapq.heappop(queues[k]) for _ in range(take)]
+                    t0 = time.perf_counter()
+                    s.admit([w[3] for w in wave], max_new=max_new,
+                            req_ids=[w[2] for w in wave])
+                    tclock[k] = now + (time.perf_counter() - t0)
+                    for _, _, i, toks, d, arr, dl in wave:
+                        inflight[i] = (k, d, len(toks), arr, dl, now)
+            if s.live_count:
+                t0 = time.perf_counter()
+                _, finished = s.step()
+                tclock[k] = max(tclock[k], now) + (time.perf_counter() - t0)
+                for rid, m_out, _toks in finished:
+                    k2, d, n, arr, dl, t_adm = inflight.pop(rid)
+                    wait = t_adm - arr
+                    service = tclock[k] - t_adm
+                    svc_ewma[k] = service if svc_ewma[k] == 0.0 else \
+                        0.8 * svc_ewma[k] + 0.2 * service
+                    results[rid] = self._complete(
+                        k2, d, n, m_out, service, wait, service,
+                        tclock[k], dl)
+
+        while ptr < n_req or inflight or any(queues.values()):
+            cand = [tclock[k] for k in sessions
+                    if queues[k] or sessions[k].live_count]
+            if ptr < n_req:
+                cand.append(arrival_s[order[ptr]])
+            now = max(now, min(cand))
+
+            while ptr < n_req and arrival_s[order[ptr]] <= now:
+                i = order[ptr]
+                ptr += 1
+                toks = np.asarray(requests[i], np.int32).reshape(-1)
+                n = int(len(toks))
+                dl = deadlines[i]
+                qd = [queue_est(j) for j in range(len(self.tiers))]
+                d = self.scheduler.decide(n, now, qd)
+
+                def cont_space(j: int, n: int = n) -> bool:
+                    if j not in sessions:
+                        return self._has_space(j, now)
+                    s = sessions[j]
+                    if n + max_new > s.max_len or n == 0:
+                        return False      # cannot fit this tier's table
+                    cap = self.tiers[j].queue_capacity
+                    backlog = len(queues[j]) - s.free_slots
+                    return cap is None or backlog < cap
+
+                k = self._admit(d, now, dl, has_space=cont_space)
+                if k < 0 or (k in sessions and not cont_space(k)):
+                    # deadline-less overflow keeps _admit's "keep the
+                    # choice" semantics for server tiers, but a slot
+                    # table has nowhere to force-enqueue an oversized
+                    # prompt — record the drop instead of crashing
+                    results[i] = self._shed(n, d, dl)
+                    continue
+                if k in sessions:
+                    vocab = sessions[k].model.cfg.vocab_size
+                    dl_key = dl if dl is not None else math.inf
+                    heapq.heappush(queues[k],
+                                   (dl_key, seq, i, np.minimum(toks, vocab - 1),
+                                    d, now, dl))
+                    seq += 1
+                else:
+                    m_out, exec_s = self.tiers[k].run(toks, d.m_hat, self.rng)
+                    wait, service_s = self._occ[k].assign(now, exec_s)
+                    results[i] = self._complete(k, d, n, m_out, exec_s,
+                                                wait, service_s, now, dl)
+
+            for k in sessions:
+                if tclock[k] <= now and (queues[k]
+                                         or sessions[k].live_count):
+                    drain(k)
+        return results  # type: ignore[return-value]
+
     def _admit(self, d: MultiTierDecision, now: float,
                deadline_s: Optional[float] = None,
-               pending: Optional[List[int]] = None) -> int:
+               pending: Optional[List[int]] = None,
+               has_space: Optional[Callable[[int], bool]] = None) -> int:
         """Bounded-FIFO admission: re-route from a full tier to the
         next-best tier with space; if everything is full, keep the choice
         and count the rejection.  Deadline-carrying requests re-route
@@ -483,18 +653,23 @@ class CollaborativeEngine:
         ``pending`` (per-tier counts) charges same-slot members already
         admitted by ``submit_batch`` against the bounded queues, so one
         concurrent slot cannot oversubscribe a capacity the sequential
-        ``submit`` path would have enforced."""
+        ``submit`` path would have enforced.  ``has_space`` overrides the
+        space predicate per tier index — ``serve_continuous`` plugs in
+        slot-table occupancy (free slots + bounded wait queue) for its
+        continuous tiers while keeping this exact shed/reroute rule."""
+        space = has_space if has_space is not None else \
+            (lambda j: self._has_space(j, now, pending))
         k = d.tier
-        if self._has_space(k, now, pending):
+        if space(k):
             return k
         ranked = sorted(range(len(self.tiers)), key=lambda j: d.t_pred[j])
         if deadline_s is None:
             for j in ranked:
-                if self._has_space(j, now, pending):
+                if space(j):
                     return j
             self.rejected[k] += 1
             return k
-        spaced = [j for j in ranked if self._has_space(j, now, pending)]
+        spaced = [j for j in ranked if space(j)]
         feasible = [j for j in spaced if d.t_pred[j] <= deadline_s]
         if feasible:
             return feasible[0]

@@ -33,6 +33,20 @@ counterpart — one drained :class:`~repro.data.pipeline.TokenBatcher`
 batch in, one batched generate, per-sequence ``(m_out, tokens)`` out —
 which the engine's ``submit_batch`` uses so real execution matches the
 batch-aware occupancy accounting.
+
+:class:`ContinuousGenerationSession` (continuous in-flight batching) is
+the Orca/vLLM-style refactor of the block path: a PERSISTENT slot table
+of ``max_slots`` sequences decodes one step per dispatch, finished rows
+are EVICTED between steps, queued prompts are PREFILLED INTO the freed
+slots of the live batch (bucketed ragged ``prefill(lengths=...)``, rows
+scattered into the resident decode state), and tokens stream out per
+step instead of one end-of-block transfer.  A drained block no longer
+runs to completion — one long sequence cannot hold ``max_slots - 1``
+finished rows hostage, which is the p95 lever under heavy Poisson load
+(ROADMAP item 1).  EOS/done semantics come from the same
+:func:`~repro.nmt.common.greedy_update` the compiled scan uses, so the
+two paths cannot drift; ``serve(..., refill=False)`` degenerates to
+exact block-to-completion scheduling for the parity pins.
 """
 
 from __future__ import annotations
@@ -46,13 +60,20 @@ import numpy as np
 
 from repro.data.tokenizer import EOS_ID, PAD_ID
 from repro.models.model import LM
-from repro.nmt.common import scan_greedy_steps
+from repro.nmt.common import greedy_update, scan_greedy_steps
 
 _LOG = logging.getLogger(__name__)
 
 # mixers whose decode caches are position-masked per sequence (slot ==
 # position, mask idx <= pos), making right-padded ragged prefill exact
 _POSITION_MASKED_MIXERS = ("attn", "mla", "shared_attn")
+
+
+def _ragged_plan_ok(model: LM) -> bool:
+    """True when ragged right-padded prompts are exact for this plan
+    (every mixer's decode cache is position-masked per sequence)."""
+    return all(g.mixer in _POSITION_MASKED_MIXERS
+               for g in model.cfg.layer_plan)
 
 
 def make_prefill_step(model: LM, *, max_len: Optional[int] = None) -> Callable:
@@ -175,8 +196,7 @@ class GenerationSession:
         self._decode = jax.jit(self._decode_scan,
                                static_argnames=("max_new",))
         self._compiled_shapes: set = set()
-        self._ragged_ok = all(g.mixer in _POSITION_MASKED_MIXERS
-                              for g in model.cfg.layer_plan)
+        self._ragged_ok = _ragged_plan_ok(model)
 
     @property
     def supports_ragged(self) -> bool:
@@ -307,3 +327,271 @@ class GenerationSession:
             out = jnp.pad(out, ((0, 0), (0, max_new - out.shape[1])),
                           constant_values=PAD_ID)
         return lens, out
+
+
+class ContinuousGenerationSession:
+    """Continuous in-flight batching over a persistent slot table.
+
+    ``max_slots`` sequences share ONE resident decode state (capacity
+    ``max_len`` per slot).  The serving loop is re-formed *between decode
+    steps*:
+
+    * :meth:`step` runs one jitted decode dispatch over the whole slot
+      table, streams each live slot's emitted token back (per-step
+      transfer of ``max_slots`` scalars, not an end-of-block barrier),
+      and EVICTS rows that emitted EOS or exhausted their ``max_new``
+      budget — their slots free immediately;
+    * :meth:`admit` PREFILLS queued prompts into the freed slots of the
+      live batch: one bucketed ragged ``LM.prefill(lengths=...)`` per
+      admission wave, its rows scattered into the resident state (KV
+      caches at batch axis 1, ``pos`` at axis 0) with padding rows
+      dropped through out-of-bounds scatter indices.
+
+    EOS/done bookkeeping is :func:`repro.nmt.common.greedy_update` with
+    ``keep_eos=True`` — the exact semantics of the compiled-scan
+    :class:`GenerationSession` path, so a sequence's emitted tokens and
+    pre-EOS length are identical to what a solo ``generate_with_lengths``
+    call produces (the parity tests pin this row-for-row).
+
+    Plans with recurrent mixers (mamba2/rwkv6) are admitted in
+    exact-width groups (their carried state would fold right-padding in);
+    position-masked plans take the bucketed ragged path.  Prompt batches
+    are padded to power-of-two (batch, width) buckets so admission waves
+    compile a bounded set of shapes.
+    """
+
+    def __init__(self, model: LM, params, *, max_slots: int = 8,
+                 max_len: int = 64, bucket_shapes: bool = True):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        if model.cfg.is_encoder_decoder:
+            raise ValueError("continuous batching needs a decoder-only LM")
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.bucket_shapes = bucket_shapes
+        self._ragged_ok = _ragged_plan_ok(model)
+        self._prefill = jax.jit(make_prefill_step(model, max_len=max_len))
+        self._step = jax.jit(self._cont_step)
+        self._write = jax.jit(self._write_rows)
+        self._compiled_shapes: set = set()
+        self.reset()
+
+    def reset(self) -> None:
+        """Empty the slot table, KEEPING the compiled shapes — benchmarks
+        warm a session once and reset between measured runs."""
+        # resident device state: seeded by a dummy prefill so every leaf
+        # has exactly the shape later admission prefills produce
+        _, state = self._prefill(
+            self.params, jnp.full((self.max_slots, 1), PAD_ID, jnp.int32))
+        self._state = state
+        self._tok = jnp.full((self.max_slots,), PAD_ID, jnp.int32)
+        self._done = jnp.ones((self.max_slots,), bool)
+
+        # host-side slot table
+        self._live = np.zeros(self.max_slots, bool)
+        self._req = [None] * self.max_slots     # caller's request id
+        self._emitted: List[List[int]] = [[] for _ in range(self.max_slots)]
+        self._m = np.zeros(self.max_slots, np.int64)     # pre-EOS count
+        self._steps_left = np.zeros(self.max_slots, np.int64)
+        self.n_steps = 0
+        self.n_prefills = 0
+        self.peak_live = 0
+
+    # ---------------------------------------------------------- queries --
+    @property
+    def supports_ragged(self) -> bool:
+        return self._ragged_ok
+
+    @property
+    def live_count(self) -> int:
+        return int(self._live.sum())
+
+    @property
+    def free_slots(self) -> int:
+        return self.max_slots - self.live_count
+
+    # ------------------------------------------------------ jitted bodies --
+    def _cont_step(self, params, state, tok, done):
+        """One in-flight decode step over the whole slot table."""
+        emit, live, done2 = greedy_update(tok, done, keep_eos=True)
+        logits, state2 = self.model.decode_step(params, state, tok[:, None])
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return state2, nxt, emit, live, done2
+
+    def _write_rows(self, state, new_state, slots, tok, done, tok0):
+        """Scatter freshly prefilled rows into the resident state.
+
+        ``slots`` may carry out-of-bounds indices (== max_slots) for the
+        batch-bucket padding rows — JAX scatter drops those updates, so
+        only the real admissions land."""
+        caches = jax.tree.map(lambda a, b: a.at[:, slots].set(b),
+                              state["caches"], new_state["caches"])
+        out = {k: (caches if k == "caches"
+                   else state[k].at[slots].set(new_state[k]))
+               for k in state}
+        return (out, tok.at[slots].set(tok0),
+                done.at[slots].set(False))
+
+    # ------------------------------------------------------------- admit --
+    def admit(self, prompts: Sequence[np.ndarray], *, max_new: int = 16,
+              req_ids: Optional[Sequence] = None) -> List[int]:
+        """Prefill ``prompts`` into free slots of the LIVE batch.
+
+        Returns the assigned slot indices (one per prompt, in order).
+        Raises when more prompts than free slots are offered — the
+        caller's admission control owns queueing, the slot table never
+        oversubscribes.
+        """
+        if not prompts:
+            return []
+        free = np.flatnonzero(~self._live)
+        if len(prompts) > len(free):
+            raise ValueError(
+                f"admit({len(prompts)}) exceeds {len(free)} free slots")
+        toks = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        for t in toks:
+            if len(t) + max_new > self.max_len:
+                raise ValueError("exceeds session capacity")
+            if len(t) == 0:
+                raise ValueError("empty prompt")
+        if req_ids is None:
+            req_ids = list(range(len(prompts)))
+        slots = [int(free[j]) for j in range(len(prompts))]
+
+        if self._ragged_ok:
+            groups = [list(range(len(toks)))]
+        else:                     # recurrent state: exact width per group
+            by_len: dict = {}
+            for j, t in enumerate(toks):
+                by_len.setdefault(len(t), []).append(j)
+            groups = [by_len[L] for L in sorted(by_len)]
+        for idx in groups:
+            self._admit_group([toks[j] for j in idx],
+                              [slots[j] for j in idx], max_new)
+
+        for j, s in enumerate(slots):
+            self._live[s] = True
+            self._req[s] = req_ids[j]
+            self._emitted[s] = []
+            self._m[s] = 0
+            self._steps_left[s] = max_new
+        self.peak_live = max(self.peak_live, self.live_count)
+        return slots
+
+    def _admit_group(self, toks: List[np.ndarray], slots: List[int],
+                     max_new: int) -> None:
+        """One prefill wave: pad to the (batch, width) bucket, prefill,
+        scatter the rows into the resident slot-table state."""
+        k = len(toks)
+        w = max(len(t) for t in toks)
+        lens = np.asarray([len(t) for t in toks], np.int32)
+        uniform = bool(np.all(lens == w))
+        if self.bucket_shapes:
+            kp = _next_pow2(k)
+            if self._ragged_ok:
+                wp = min(_next_pow2(w, floor=8), self.max_len - max_new)
+                wp = max(wp, w)
+            else:
+                wp = w
+        else:
+            kp, wp = k, w
+        block = np.full((kp, wp), PAD_ID, np.int32)
+        for j, t in enumerate(toks):
+            block[j, :len(t)] = t
+        lens_in = np.concatenate([lens, np.ones(kp - k, np.int32)])
+        key = (kp, wp, "prefill")
+        if key not in self._compiled_shapes:
+            self._compiled_shapes.add(key)
+            _LOG.warning("ContinuousGenerationSession: compiling admission "
+                         "shape batch=%d width=%d", kp, wp)
+        if self._ragged_ok and not (uniform and kp == k and wp == w):
+            logits, new_state = self._prefill(
+                self.params, jnp.asarray(block), jnp.asarray(lens_in))
+        else:
+            logits, new_state = self._prefill(self.params,
+                                              jnp.asarray(block))
+        tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+        # bucket-padding rows scatter to index max_slots: out of bounds,
+        # dropped — only the k real rows land in the table
+        slot_idx = np.full(kp, self.max_slots, np.int32)
+        slot_idx[:k] = slots
+        self._state, self._tok, self._done = self._write(
+            self._state, new_state, jnp.asarray(slot_idx),
+            self._tok, self._done, tok0)
+        self.n_prefills += 1
+
+    # -------------------------------------------------------------- step --
+    def step(self) -> Tuple[List[tuple], List[tuple]]:
+        """One in-flight decode step for every live slot.
+
+        Returns ``(stream, finished)``: ``stream`` is the per-step token
+        stream ``[(req_id, token), ...]`` (EOS included when emitted) and
+        ``finished`` lists the rows evicted this step as ``(req_id,
+        m_out, tokens)`` — ``m_out`` counting pre-EOS tokens and
+        ``tokens`` the emitted array (EOS kept, never PAD-padded).  Free
+        slots are skipped; an empty table is a no-op.
+        """
+        if not self._live.any():
+            return [], []
+        state2, nxt, emit, live, done2 = self._step(
+            self.params, self._state, self._tok, self._done)
+        self._state, self._tok, self._done = state2, nxt, done2
+        emit = np.asarray(emit)
+        live_arr = np.asarray(live)
+        done_h = np.asarray(done2)
+        self.n_steps += 1
+
+        stream: List[tuple] = []
+        finished: List[tuple] = []
+        exhausted = np.zeros(self.max_slots, bool)
+        for s in np.flatnonzero(self._live):
+            # every live slot entered the step with done=False (EOS and
+            # budget rows evict immediately), so emit is a genuine token
+            # — possibly a real token whose id equals PAD_ID
+            t = int(emit[s])
+            self._emitted[s].append(t)
+            stream.append((self._req[s], t))
+            self._m[s] += int(live_arr[s])
+            self._steps_left[s] -= 1
+            if done_h[s] or self._steps_left[s] <= 0:
+                if not done_h[s]:      # budget out: silence the row too
+                    exhausted[s] = True
+                self._live[s] = False
+                finished.append((self._req[s], int(self._m[s]),
+                                 np.asarray(self._emitted[s], np.int32)))
+                self._req[s] = None
+                self._emitted[s] = []
+        if exhausted.any():
+            self._done = jnp.logical_or(self._done, jnp.asarray(exhausted))
+        return stream, finished
+
+    # ------------------------------------------------------------- serve --
+    def serve(self, prompts: Sequence[np.ndarray], *, max_new: int = 16,
+              refill: bool = True) -> List[Tuple[int, np.ndarray]]:
+        """Scheduling-free driver: run ``prompts`` through the slot table.
+
+        ``refill=True`` is continuous mode — freed slots are refilled
+        from the queue between steps.  ``refill=False`` is the PR 3
+        block-to-completion discipline: a block of up to ``max_slots``
+        prompts is admitted only when the table is EMPTY and runs until
+        every member finishes (the parity baseline).  Returns
+        ``(m_out, tokens)`` per prompt, in prompt order.
+        """
+        results: List[Optional[Tuple[int, np.ndarray]]] = [None] * len(prompts)
+        queue = list(range(len(prompts)))
+        head = 0
+        while head < len(queue) or self.live_count:
+            can_admit = self.free_slots if (refill or self.live_count == 0) \
+                else 0
+            take = min(can_admit, len(queue) - head)
+            if take:
+                idx = queue[head:head + take]
+                head += take
+                self.admit([prompts[i] for i in idx], max_new=max_new,
+                           req_ids=idx)
+            _, finished = self.step()
+            for rid, m, toks in finished:
+                results[rid] = (m, toks)
+        return results  # type: ignore[return-value]

@@ -1,0 +1,51 @@
+"""Run every example script in smoke mode so example drift fails tier-1.
+
+Each ``examples/*.py`` honours ``REPRO_SMOKE=1`` (shrunk request
+streams / step counts); this test executes each one in a fresh
+interpreter — an example that raises, asserts, or rots against the API
+fails the suite instead of rotting silently.  The re-anchor at PR 5
+deleted the original file and left only its ``.pyc`` ghost; this is the
+restored surface.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_ROOT = Path(__file__).resolve().parent.parent
+_EXAMPLES = sorted((_ROOT / "examples").glob("*.py"))
+
+
+def test_every_example_is_covered():
+    """The parametrized list below must track examples/ exactly."""
+    assert [p.name for p in _EXAMPLES] == [
+        "big_model_serving.py",
+        "collaborative_serving.py",
+        "continuous_serving.py",
+        "multitier_serving.py",
+        "quickstart.py",
+        "train_nmt.py",
+    ]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("script", _EXAMPLES, ids=lambda p: p.stem)
+def test_example_runs_in_smoke_mode(script, tmp_path):
+    env = dict(os.environ,
+               REPRO_SMOKE="1",
+               PYTHONPATH=str(_ROOT / "src"),
+               # keep any example's checkpoint/json artifacts out of the
+               # repo and isolated per test run
+               TMPDIR=str(tmp_path))
+    proc = subprocess.run(
+        [sys.executable, str(script)],
+        cwd=str(tmp_path), env=env,
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"{script.name} failed (exit {proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-4000:]}")
+    assert proc.stdout.strip(), f"{script.name} printed nothing"

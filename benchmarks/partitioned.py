@@ -1,0 +1,258 @@
+"""Partitioned (encoder/decoder split) placement vs whole-request offload.
+
+PR 7's ``PlacementPlan`` lets the scheduler put the encoder and the
+decoder of one request on *different* tiers, shipping the encoder
+states (n x d_model activations) over the inter-tier link instead of
+bouncing the whole request off a single tier.  The classic regime where
+this wins: the cloud decodes an order of magnitude faster but sits
+behind a slow client link, while a nearby edge box encodes cheaply —
+encode at the edge, ship states over the fat edge->cloud backbone,
+decode in the cloud, return tokens over the cloud downlink only once.
+
+Two sections:
+
+* ``run_analytic`` — the headline sweep: backbone bandwidth x source
+  length, zero queues.  Every plan (3 whole placements + all ordered
+  splits) is priced with the scheduler's own ``plan_cost_fast`` and the
+  best split is compared against the best whole placement.  The split
+  must STRICTLY beat every whole placement in at least one swept cell
+  (hard failure otherwise — the PR 7 acceptance bar) and must lose when
+  the backbone is throttled to ~1 Mbps (activation shipping has to pay
+  for itself, otherwise the cost model is broken).
+* ``run_des`` — the winning analytic cell replayed on the two-leg DES
+  (encode station -> transfer event -> decode station) under light
+  Poisson load with noisy ground truth: the same stream served with
+  splits disabled and enabled; enabled must actually split and must
+  strictly improve mean latency.
+
+Emits ``BENCH_partition.json`` (``--json``) for the CI artifact trail.
+
+Run: PYTHONPATH=src python benchmarks/partitioned.py [--smoke]
+     [--json BENCH_partition.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.latency_model import (ActivationCostModel, DeviceProfile,
+                                      LinearLatencyModel)
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import ConnectionProfile
+from repro.core.scheduler import MultiTierScheduler, PlacementPlan, SchedTier
+from repro.core.simulator import RequestStream, SimTier, simulate_des
+from repro.core.tx_estimator import LinkModel, TxEstimator
+
+_SEED = 23
+_D_MODEL = 512
+_DTYPE_BYTES = 4
+
+# device: fast to reach (local), slow to compute; edge: cheap encoder,
+# mediocre decoder, good client link; cloud: very fast decoder behind a
+# slow client link.  Encode cost ~alpha_n, decode cost ~alpha_m (paper
+# SS II-A linearity), beta split evenly across the legs.
+_DEV = LinearLatencyModel(3e-4, 5e-3, 2e-3)
+_EDGE = LinearLatencyModel(2e-5, 2.5e-3, 4e-3)
+_CLOUD = LinearLatencyModel(1e-5, 1e-4, 2e-3)
+_EDGE_RTT, _EDGE_BW = 5e-3, 200e6
+_CLOUD_RTT, _CLOUD_BW = 90e-3, 20e6
+_BACKBONE_RTT = 4e-3
+
+
+def _build_scheduler(backbone_bps: float, *,
+                     allow_split: bool = True) -> MultiTierScheduler:
+    tiers = [
+        SchedTier("dev", LinearLatencyModel(*_as_tuple(_DEV)), None),
+        SchedTier("edge", LinearLatencyModel(*_as_tuple(_EDGE)),
+                  TxEstimator(init_rtt_s=_EDGE_RTT, bandwidth_bps=_EDGE_BW)),
+        SchedTier("cloud", LinearLatencyModel(*_as_tuple(_CLOUD)),
+                  TxEstimator(init_rtt_s=_CLOUD_RTT,
+                              bandwidth_bps=_CLOUD_BW)),
+    ]
+    links = LinkModel(3)
+    links.add_link(1, 2, TxEstimator(init_rtt_s=_BACKBONE_RTT,
+                                     bandwidth_bps=backbone_bps))
+    n2m = LinearN2M().fit(np.arange(1.0, 400.0), np.arange(1.0, 400.0))
+    return MultiTierScheduler(
+        tiers, n2m, links=links,
+        activation=ActivationCostModel(_D_MODEL, _DTYPE_BYTES),
+        allow_split=allow_split)
+
+
+def _as_tuple(m: LinearLatencyModel):
+    return (m.alpha_n, m.alpha_m, m.beta)
+
+
+def _const_profile(name: str, rtt_s: float,
+                   bandwidth_bps: float) -> ConnectionProfile:
+    times = np.array([0.0, 3600.0])
+    return ConnectionProfile(name=name, times_s=times,
+                             rtt_s=np.array([rtt_s, rtt_s]),
+                             bandwidth_bps=bandwidth_bps)
+
+
+def run_analytic(backbone_bps=(1e6, 1e7, 1e8, 1e9),
+                 src_lens=(8, 32, 128, 256), verbose: bool = True,
+                 check: bool = True):
+    """Zero-queue plan costs over a backbone-bandwidth x length grid.
+
+    Returns ``(rows, csv)``; ``rows[(bps, n)]`` holds the best whole /
+    best split plan costs and the chosen plan.  With ``check=True`` the
+    sweep must contain at least one cell where a split STRICTLY beats
+    every whole placement, and no split win at the slowest backbone.
+    """
+    rows = {}
+    csv = []
+    zero_q = [0.0, 0.0, 0.0]
+    plans_split = [PlacementPlan.split(e, d)
+                   for e in range(3) for d in range(3) if e != d]
+    for bps in backbone_bps:
+        sched = _build_scheduler(bps)
+        for n in src_lens:
+            m_hat = float(np.asarray(sched.n2m.predict(float(n))))
+            whole = {k: sched.plan_cost_fast(PlacementPlan.whole(k),
+                                             float(n), m_hat, 0.0, zero_q)
+                     for k in range(3)}
+            split = {p: sched.plan_cost_fast(p, float(n), m_hat, 0.0, zero_q)
+                     for p in plans_split}
+            best_whole_k = min(whole, key=whole.get)
+            best_split_p = min(split, key=split.get)
+            bw_t, bs_t = whole[best_whole_k], split[best_split_p]
+            rows[(bps, n)] = {
+                "best_whole_tier": best_whole_k,
+                "best_whole_s": bw_t,
+                "best_split": (best_split_p.encode_tier,
+                               best_split_p.decode_tier),
+                "best_split_s": bs_t,
+                "split_wins": bool(bs_t < bw_t),
+                "speedup": bw_t / bs_t if bs_t > 0 else float("inf"),
+            }
+            csv.append(f"partition_bw{bps:.0e}_n{n},"
+                       f"{min(bw_t, bs_t)*1e6:.1f},"
+                       f"whole={bw_t*1e3:.1f}ms|split={bs_t*1e3:.1f}ms"
+                       f"|{'SPLIT' if bs_t < bw_t else 'WHOLE'}")
+            if verbose:
+                print(f"[partition] bw={bps:8.0e}bps n={n:4d} "
+                      f"whole[{best_whole_k}]={bw_t*1e3:8.2f}ms "
+                      f"split{rows[(bps, n)]['best_split']}="
+                      f"{bs_t*1e3:8.2f}ms "
+                      f"{'SPLIT WINS' if bs_t < bw_t else ''}")
+    wins = [(bps, n) for (bps, n), r in rows.items() if r["split_wins"]]
+    slowest = min(backbone_bps)
+    slow_wins = [c for c in wins if c[0] == slowest]
+    if check:
+        if not wins:
+            raise AssertionError(
+                "[partition] no swept regime where a split placement "
+                "strictly beats the best whole placement — the "
+                "PlacementPlan cost model is not paying off")
+        if slow_wins:
+            raise AssertionError(
+                f"[partition] split 'wins' at a {slowest:.0e} bps backbone "
+                "— activation shipping is not being priced")
+    if verbose:
+        print(f"[partition] split wins in {len(wins)}/{len(rows)} cells")
+    return rows, csv
+
+
+def run_des(backbone_bps: float, n_src: int, n_requests: int = 2000,
+            rate_hz: float = 5.0, verbose: bool = True, check: bool = True):
+    """Replay the winning analytic cell on the two-leg DES.
+
+    The same stream is served split-disabled and split-enabled; enabled
+    must actually produce splits and strictly improve mean latency.
+    """
+    rng = np.random.default_rng(_SEED)
+    arr = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    ns = rng.integers(max(n_src // 2, 4), n_src + n_src // 2,
+                      n_requests).astype(np.float64)
+    stream = RequestStream(t_arrival_s=arr, n=ns, m_out=ns.copy(),
+                           m_real=ns.copy())
+
+    def tiers():
+        return [
+            SimTier("dev", DeviceProfile("dev", LinearLatencyModel(
+                *_as_tuple(_DEV)), 0.05)),
+            SimTier("edge", DeviceProfile("edge", LinearLatencyModel(
+                *_as_tuple(_EDGE)), 0.05),
+                link=_const_profile("edge-up", _EDGE_RTT, _EDGE_BW)),
+            SimTier("cloud", DeviceProfile("cloud", LinearLatencyModel(
+                *_as_tuple(_CLOUD)), 0.05),
+                link=_const_profile("cloud-up", _CLOUD_RTT, _CLOUD_BW)),
+        ]
+
+    inter = {(1, 2): _const_profile("backbone", _BACKBONE_RTT, backbone_bps)}
+    base = simulate_des(_build_scheduler(backbone_bps, allow_split=False),
+                        stream, tiers(), seed=_SEED)
+    part = simulate_des(_build_scheduler(backbone_bps), stream, tiers(),
+                        seed=_SEED, inter_links=inter, collect_events=True)
+    n_split = sum(1 for e in part.events if e[1] == "xfer")
+    rows = {
+        "whole_mean_latency_s": float(np.nanmean(base.latency_s)),
+        "whole_p95_latency_s": base.p95_latency_s(),
+        "split_mean_latency_s": float(np.nanmean(part.latency_s)),
+        "split_p95_latency_s": part.p95_latency_s(),
+        "n_split": int(n_split),
+        "n_requests": int(n_requests),
+    }
+    ok = (n_split > 0
+          and rows["split_mean_latency_s"] < rows["whole_mean_latency_s"])
+    msg = (f"[partition] DES bw={backbone_bps:.0e} n~{n_src}: "
+           f"whole mean={rows['whole_mean_latency_s']*1e3:.1f}ms -> "
+           f"split mean={rows['split_mean_latency_s']*1e3:.1f}ms "
+           f"({n_split}/{n_requests} split)  "
+           f"{'WIN' if ok else 'REGRESSION'}")
+    if verbose:
+        print(msg)
+    if check and not ok:
+        raise AssertionError(msg)
+    csv = [f"partition_des_whole,{rows['whole_mean_latency_s']*1e6:.1f},"
+           f"p95={rows['whole_p95_latency_s']*1e3:.1f}ms",
+           f"partition_des_split,{rows['split_mean_latency_s']*1e6:.1f},"
+           f"p95={rows['split_p95_latency_s']*1e3:.1f}ms"
+           f"|splits={n_split}"]
+    return rows, csv
+
+
+def run(backbone_bps=(1e6, 1e7, 1e8, 1e9), src_lens=(8, 32, 128, 256),
+        n_requests: int = 2000, verbose: bool = True,
+        out_json: str | None = None):
+    analytic, csv = run_analytic(backbone_bps=backbone_bps,
+                                 src_lens=src_lens, verbose=verbose)
+    # replay the widest-margin winning cell on the DES
+    win_cell = max((c for c, r in analytic.items() if r["split_wins"]),
+                   key=lambda c: analytic[c]["speedup"])
+    des, des_csv = run_des(win_cell[0], win_cell[1], n_requests=n_requests,
+                           verbose=verbose)
+    csv = csv + des_csv
+
+    if out_json:
+        payload = {
+            "d_model": _D_MODEL,
+            "dtype_bytes": _DTYPE_BYTES,
+            "analytic": [{"backbone_bps": bps, "n": n, **row}
+                         for (bps, n), row in analytic.items()],
+            "des_cell": {"backbone_bps": win_cell[0], "n": win_cell[1]},
+            "des": des,
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        if verbose:
+            print(f"[partition] wrote {out_json}")
+    return {"analytic": analytic, "des": des}, csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI invocation (small sweep + stream)")
+    ap.add_argument("--json", default=None, help="dump results JSON here")
+    args = ap.parse_args()
+    if args.smoke:
+        run(backbone_bps=(1e6, 1e8), src_lens=(16, 128), n_requests=500,
+            out_json=args.json)
+    else:
+        run(out_json=args.json)

@@ -12,6 +12,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
                (tokens/sec + p50 step latency, batch x src_len sweep)
   continuous — continuous in-flight batching vs block-to-completion
                (DES rate x slots sweep + real slot-table execution)
+  partition  — encoder/decoder split placement vs whole-request offload
+               (backbone bandwidth x length sweep + two-leg DES replay)
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -73,6 +75,15 @@ def main() -> None:
                                        out_json="BENCH_decode.json")
     else:
         _, csv = decode_throughput.run(out_json="BENCH_decode.json")
+    csv_all += csv
+
+    from benchmarks import partitioned
+    if fast:
+        _, csv = partitioned.run(backbone_bps=(1e6, 1e8),
+                                 src_lens=(16, 128), n_requests=500,
+                                 out_json="BENCH_partition.json")
+    else:
+        _, csv = partitioned.run(out_json="BENCH_partition.json")
     csv_all += csv
 
     from benchmarks import roofline

@@ -19,8 +19,12 @@ from repro.core.length_regressor import (
     MeanN2M,
     prefilter_pairs,
 )
-from repro.core.latency_model import LinearLatencyModel, DeviceProfile
-from repro.core.tx_estimator import TxEstimator
+from repro.core.latency_model import (
+    ActivationCostModel,
+    DeviceProfile,
+    LinearLatencyModel,
+)
+from repro.core.tx_estimator import LinkModel, TxEstimator
 from repro.core.calibration import OnlineCalibrator
 from repro.core.scheduler import (
     CNMTScheduler,
@@ -28,6 +32,7 @@ from repro.core.scheduler import (
     MultiTierDecision,
     NaiveScheduler,
     OracleScheduler,
+    PlacementPlan,
     SchedTier,
     StaticScheduler,
     EDGE,
@@ -52,10 +57,13 @@ __all__ = [
     "BucketN2M",
     "MeanN2M",
     "prefilter_pairs",
+    "ActivationCostModel",
     "LinearLatencyModel",
     "DeviceProfile",
+    "LinkModel",
     "TxEstimator",
     "OnlineCalibrator",
+    "PlacementPlan",
     "CNMTScheduler",
     "MultiTierScheduler",
     "MultiTierDecision",

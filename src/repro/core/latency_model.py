@@ -54,6 +54,23 @@ class LinearLatencyModel:
         m = jnp.asarray(m, jnp.float32)
         return self.alpha_n * n + self.alpha_m * m + self.beta
 
+    def predict_legs(self, n, m):
+        """Split the plane into (encode, decode) leg predictions.
+
+        The alpha_n·N term is encoder work, the alpha_m·M term is
+        autoregressive decode work, and beta (framework/dispatch
+        overhead) is paid once per leg when the legs run on different
+        tiers — so each leg carries half of it.  By construction
+        ``sum(predict_legs(n, m)) == predict(n, m)`` up to float
+        association: a whole-request placement prices identically
+        whether viewed as one plane or two legs on the same tier.
+        """
+        n = np.asarray(n, np.float64)
+        m = np.asarray(m, np.float64)
+        t_enc = self.alpha_n * n + 0.5 * self.beta
+        t_dec = self.alpha_m * m + 0.5 * self.beta
+        return t_enc, t_dec
+
     def r2(self, n, m, t) -> float:
         t = jnp.asarray(t, jnp.float32)
         pred = self.predict(n, m)
@@ -118,7 +135,44 @@ class DeviceProfile:
         eps = np.clip(rng.standard_normal(base.shape), -3.0, 3.0)
         return np.maximum(base * (1.0 + self.noise_frac * eps), 1e-6)
 
+    def true_leg_times(self, n, m, rng: np.random.Generator):
+        """Noisy (encode, decode) leg times for a split placement.
+
+        Each leg draws its own truncated-normal perturbation — the two
+        legs of a partitioned request run at different wall-clock times
+        (often on different tiers), so their load/DVFS noise is
+        independent, unlike :meth:`true_time`'s single draw.
+        """
+        enc, dec = self.model.predict_legs(n, m)
+        enc = np.asarray(enc, np.float64)
+        dec = np.asarray(dec, np.float64)
+        eps_e = np.clip(rng.standard_normal(enc.shape), -3.0, 3.0)
+        eps_d = np.clip(rng.standard_normal(dec.shape), -3.0, 3.0)
+        return (np.maximum(enc * (1.0 + self.noise_frac * eps_e), 1e-6),
+                np.maximum(dec * (1.0 + self.noise_frac * eps_d), 1e-6))
+
 
 def bytes_for_tokens(n_tokens, bytes_per_token: int = 2) -> np.ndarray:
     """Paper §II: dictionary-index encoding needs <= 2 bytes/token."""
     return np.asarray(n_tokens) * bytes_per_token
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationCostModel:
+    """Wire size of a model's encoder states for cross-tier shipping.
+
+    Whole-request offload ships *tokens* (~2 bytes each, see
+    :func:`bytes_for_tokens`); a split placement ships *activations* —
+    the encoder's output states, ``n x d_model`` floats plus a small
+    per-sequence overhead (source lengths, masks).  That is 3-4 orders
+    of magnitude fatter per token, which is exactly why the scheduler
+    must price it per model instead of reusing the token byte count.
+    """
+
+    d_model: int
+    dtype_bytes: int = 4
+    per_seq_overhead_bytes: int = 0
+
+    def payload_bytes(self, n) -> np.ndarray:
+        return (np.asarray(n, np.float64) * self.d_model * self.dtype_bytes
+                + self.per_seq_overhead_bytes)

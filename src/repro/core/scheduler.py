@@ -42,17 +42,18 @@ Beyond paper
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.latency_model import (
+    ActivationCostModel,
     DeviceProfile,
     LinearLatencyModel,
     bytes_for_tokens,
 )
 from repro.core.length_regressor import LinearN2M, MeanN2M
-from repro.core.tx_estimator import TxEstimator
+from repro.core.tx_estimator import LinkModel, TxEstimator
 
 EDGE = 0
 CLOUD = 1
@@ -164,11 +165,46 @@ class SchedTier:
         return self.tx is None
 
 
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """Where each leg of a request runs — the generalized decision space.
+
+    The paper's Eq. (1) picks *one* tier per request; the plan
+    abstraction grows that to "which cut point": ``whole(k)`` runs both
+    legs on tier k (the paper's case), ``split(e, d)`` runs the encoder
+    on tier e, ships the encoder states over the e→d link, and decodes
+    on tier d.  ``split(k, k)`` *is* ``whole(k)`` — same frozen
+    dataclass value, zero transfer cost — so the whole-request rule is
+    literally the diagonal of the plan space.
+    """
+
+    encode_tier: int
+    decode_tier: int
+
+    @classmethod
+    def whole(cls, tier: int) -> "PlacementPlan":
+        return cls(tier, tier)
+
+    @classmethod
+    def split(cls, encode_tier: int, decode_tier: int) -> "PlacementPlan":
+        return cls(encode_tier, decode_tier)
+
+    @property
+    def is_split(self) -> bool:
+        return self.encode_tier != self.decode_tier
+
+
 @dataclasses.dataclass
 class MultiTierDecision:
     tier: int                  # index into the scheduler's tier list
     t_pred: Tuple[float, ...]  # per-tier predicted T_queue + T_tx + T_exe
     m_hat: float
+    # Plan-aware extensions (None on the scalar decide paths): the chosen
+    # placement, and the predicted total per evaluated plan.  ``tier``
+    # stays the *decode* tier of the plan so existing per-tier admission
+    # and reroute logic keeps working unchanged.
+    plan: Optional[PlacementPlan] = None
+    plan_t_pred: Optional[Dict[PlacementPlan, float]] = None
 
 
 class MultiTierScheduler(BaseScheduler):
@@ -186,6 +222,10 @@ class MultiTierScheduler(BaseScheduler):
 
     def __init__(self, tiers: Sequence[SchedTier], n2m: LinearN2M, *,
                  bytes_per_token: int = 2, hedge_margin_s: float = 0.0,
+                 links: Optional[LinkModel] = None,
+                 activation: Optional[ActivationCostModel] = None,
+                 allow_split: bool = False,
+                 explore_eps: float = 0.0, explore_seed: int = 0,
                  name: str = "c-nmt-ntier"):
         if not tiers:
             raise ValueError("need at least one tier")
@@ -193,9 +233,46 @@ class MultiTierScheduler(BaseScheduler):
         self.n2m = n2m
         self.bytes_per_token = bytes_per_token
         self.hedge_margin_s = hedge_margin_s
+        self.links = links
+        self.activation = activation
+        self.allow_split = allow_split
+        self.explore_eps = explore_eps
+        self._explore_rng = np.random.default_rng(explore_seed)
+        self._since_pick = [0] * len(self.tiers)
+        self.n_explored = 0
         self.name = name
 
     # ------------------------------------------------------------ helpers --
+    def _split_ready(self) -> bool:
+        """Split plans need a link matrix to price the inter-tier hop and
+        an activation model to price the encoder-state payload."""
+        return (self.allow_split and self.links is not None
+                and self.activation is not None)
+
+    def _explore_override(self, chosen: int) -> int:
+        """ε-greedy cold-start probing of starved tiers (ROADMAP 5a).
+
+        A tier whose believed plane is too slow never wins the argmin,
+        so `OnlineCalibrator` never sees samples from it and can never
+        correct the belief — a self-sealing mis-calibration.  With
+        probability ``explore_eps`` route the request to the tier that
+        has gone longest without traffic instead of the argmin winner.
+        With ``explore_eps == 0`` (the default) this returns immediately
+        without touching the RNG or any counter, so all existing
+        bit-for-bit decision pins are unaffected.
+        """
+        if self.explore_eps <= 0.0 or len(self.tiers) < 2:
+            return chosen
+        for i in range(len(self._since_pick)):
+            self._since_pick[i] += 1
+        if self._explore_rng.random() < self.explore_eps:
+            starved = int(np.argmax(self._since_pick))
+            if starved != chosen:
+                self.n_explored += 1
+                chosen = starved
+        self._since_pick[chosen] = 0
+        return chosen
+
     def _select(self, totals: Sequence[float]) -> int:
         """argmin with the local-preference hedge (see class docstring)."""
         best = 0
@@ -256,7 +333,8 @@ class MultiTierScheduler(BaseScheduler):
             t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
             q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
             totals.append(t_exe + t_tx + q)
-        return MultiTierDecision(self._select(totals), tuple(totals), m_hat)
+        pick = self._explore_override(self._select(totals))
+        return MultiTierDecision(pick, tuple(totals), m_hat)
 
     def decide_fast(self, n: float, m_hat: float, now_s: float,
                     queue_delay_s: Optional[Sequence[float]] = None
@@ -265,6 +343,16 @@ class MultiTierScheduler(BaseScheduler):
         discrete-event simulator — the same coefficient arithmetic as
         ``simulator._simulate_online``, so the empty-queue DES replay
         matches the analytic replay exactly."""
+        totals = self._whole_totals_fast(n, m_hat, now_s, queue_delay_s)
+        pick = self._explore_override(self._select(totals))
+        return MultiTierDecision(pick, tuple(totals), m_hat)
+
+    def _whole_totals_fast(self, n: float, m_hat: float, now_s: float,
+                           queue_delay_s: Optional[Sequence[float]]
+                           ) -> List[float]:
+        """Per-tier whole-request totals, closed-form float64 — the exact
+        arithmetic `decide_fast` has always used (op order pinned by the
+        DES-vs-analytic equivalence tests)."""
         payload = (n + m_hat) * self.bytes_per_token
         totals: List[float] = []
         for k, tier in enumerate(self.tiers):
@@ -273,7 +361,108 @@ class MultiTierScheduler(BaseScheduler):
             t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
             q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
             totals.append(t_exe + t_tx + q)
-        return MultiTierDecision(self._select(totals), tuple(totals), m_hat)
+        return totals
+
+    # -------------------------------------------------- placement plans --
+    def plan_cost_fast(self, plan: PlacementPlan, n: float, m_hat: float,
+                       now_s: float,
+                       queue_delay_s: Optional[Sequence[float]] = None
+                       ) -> float:
+        """Predicted total latency of one placement plan (closed form).
+
+        ``whole(k)`` (and therefore ``split(k, k)``) reproduces the
+        `decide_fast` per-tier total bit-for-bit: same plane arithmetic,
+        same token payload, same full-RTT tx term — the plan space's
+        diagonal IS the paper's rule.  A genuine split pays:
+
+            T_queue,e + up + T_enc,e + ship(e→d) + T_queue,d + T_dec,d + down
+
+        where `up` ships N source tokens one-way over tier e's client
+        link, `ship` moves the encoder states (n × d_model × dtype
+        bytes) one-way over the e→d link (``math.inf`` when no path is
+        registered, making the plan infeasible), and `down` returns
+        M_hat output tokens one-way over tier d's client link.
+        """
+        if not plan.is_split:
+            k = plan.decode_tier
+            tier = self.tiers[k]
+            m = tier.model
+            t_exe = m.alpha_n * n + m.alpha_m * m_hat + m.beta
+            payload = (n + m_hat) * self.bytes_per_token
+            t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
+            q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
+            return t_exe + t_tx + q
+        e, d = plan.encode_tier, plan.decode_tier
+        enc_tier, dec_tier = self.tiers[e], self.tiers[d]
+        t_enc = enc_tier.model.alpha_n * n + 0.5 * enc_tier.model.beta
+        t_dec = dec_tier.model.alpha_m * m_hat + 0.5 * dec_tier.model.beta
+        up = 0.0 if enc_tier.tx is None else enc_tier.tx.tx_time(
+            now_s, n * self.bytes_per_token, one_way=True)
+        down = 0.0 if dec_tier.tx is None else dec_tier.tx.tx_time(
+            now_s, m_hat * self.bytes_per_token, one_way=True)
+        ship = self.links.tx_time(
+            e, d, now_s, float(self.activation.payload_bytes(n)),
+            one_way=True)
+        q_e = 0.0 if queue_delay_s is None else float(queue_delay_s[e])
+        q_d = 0.0 if queue_delay_s is None else float(queue_delay_s[d])
+        return q_e + up + t_enc + ship + q_d + t_dec + down
+
+    def _plan_decision(self, n: float, m_hat: float, now_s: float,
+                       queue_delay_s: Optional[Sequence[float]],
+                       totals: List[float]) -> MultiTierDecision:
+        """Shared tail of the plan-aware decide paths: run the whole-
+        request selection (hedge + exploration, unchanged), then let a
+        split plan take over only when strictly cheaper."""
+        k0 = self._select(totals)
+        k = self._explore_override(k0)
+        whole = PlacementPlan.whole(k)
+        if not self._split_ready() or k != k0:
+            # splits off, or exploration forced a tier: whole-request plan
+            return MultiTierDecision(k, tuple(totals), m_hat, plan=whole)
+        n_tiers = len(self.tiers)
+        plan_costs: Dict[PlacementPlan, float] = {
+            PlacementPlan.whole(j): totals[j] for j in range(n_tiers)}
+        best_plan, best_cost = whole, totals[k]
+        for e in range(n_tiers):
+            for d in range(n_tiers):
+                if e == d:
+                    continue
+                p = PlacementPlan.split(e, d)
+                c = self.plan_cost_fast(p, n, m_hat, now_s, queue_delay_s)
+                plan_costs[p] = c
+                if c < best_cost:      # strict: ties keep the whole plan
+                    best_plan, best_cost = p, c
+        return MultiTierDecision(best_plan.decode_tier, tuple(totals), m_hat,
+                                 plan=best_plan, plan_t_pred=plan_costs)
+
+    def decide_plan(self, n: int, now_s: float,
+                    queue_delay_s: Optional[Sequence[float]] = None
+                    ) -> MultiTierDecision:
+        """Plan-aware single-request rule (jnp prediction path).
+
+        Whole-request totals use the exact `decide` arithmetic, so with
+        splits disabled this is `decide` bit-for-bit (plus the chosen
+        ``plan`` attached).  ``tier`` is always the plan's decode tier —
+        per-tier admission/reroute logic downstream is unchanged.
+        """
+        m_hat = self.m_hat(n)
+        payload = float(bytes_for_tokens(n + m_hat, self.bytes_per_token))
+        totals: List[float] = []
+        for k, tier in enumerate(self.tiers):
+            t_exe = float(np.asarray(tier.model.predict(float(n), m_hat)))
+            t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
+            q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
+            totals.append(t_exe + t_tx + q)
+        return self._plan_decision(float(n), m_hat, now_s, queue_delay_s,
+                                   totals)
+
+    def decide_plan_fast(self, n: float, m_hat: float, now_s: float,
+                         queue_delay_s: Optional[Sequence[float]] = None
+                         ) -> MultiTierDecision:
+        """Plan-aware closed-form rule for the DES: `decide_fast`
+        bit-for-bit when splits are disabled."""
+        totals = self._whole_totals_fast(n, m_hat, now_s, queue_delay_s)
+        return self._plan_decision(n, m_hat, now_s, queue_delay_s, totals)
 
     def decide_batch(self, n: np.ndarray, rtt: np.ndarray) -> np.ndarray:
         """Vectorized empty-queue rule (analytic-simulator counterpart of

@@ -318,7 +318,8 @@ def table1_row(
 
 
 # ===================================================================== DES --
-_ARRIVAL, _FINISH = 0, 1
+_ARRIVAL, _FINISH, _XARR = 0, 1, 2   # _XARR: encoder states arrive at
+                                     # a split plan's decode tier
 
 
 @dataclasses.dataclass
@@ -457,6 +458,7 @@ def simulate_des(
     bytes_per_token: Optional[int] = None,
     calibrator: Optional[OnlineCalibrator] = None,
     collect_events: bool = False,
+    inter_links: Optional[Dict] = None,
 ) -> DESResult:
     """Event-driven replay of ``stream`` over N queued tiers.
 
@@ -482,6 +484,17 @@ def simulate_des(
     Requests carrying a finite ``stream.slo_s`` deadline are admitted
     only where the predicted completion meets it, shed otherwise (see
     module docstring); without deadlines admission is PR-1-exact.
+
+    ``inter_links`` maps directed tier pairs ``(e, k)`` to ground-truth
+    :class:`~repro.core.profiles.ConnectionProfile` traces for the
+    encoder-state hop of a split placement.  When it is provided *and*
+    the scheduler is split-ready (links + activation + allow_split), the
+    DES runs two-leg service: the encode leg occupies tier ``e``, a
+    transfer event delivers the states after a one-way ship time, and
+    the decode leg queues at tier ``k`` from its own arrival instant.
+    Client up/down legs are priced one-way and added post-hoc, exactly
+    like whole-request T_tx.  With splits disabled the run is bit-for-bit
+    identical to the single-leg simulator.
     """
     k_tiers = len(tiers)
     if k_tiers != len(scheduler.tiers):
@@ -498,6 +511,30 @@ def simulate_des(
     true_tx = [np.zeros(n_req) if t.link is None
                else t.link.tx_time(stream.t_arrival_s, payload_true)
                for t in tiers]
+
+    # ---- split (two-leg) placement support ------------------------------
+    # Everything below is gated on ``split_enabled``; with splits disabled
+    # (no inter_links, or a scheduler without links/activation/allow_split)
+    # the run is bit-for-bit identical to the single-leg simulator.
+    split_enabled = (
+        inter_links is not None and len(inter_links) > 0
+        and getattr(scheduler, "_split_ready", None) is not None
+        and scheduler._split_ready())
+    leg_of = np.zeros(n_req, np.int8)   # 0 whole, 1 encode leg, 2 decode leg
+    split_mask = np.zeros(n_req, bool)
+    split_enc = np.full(n_req, -1, np.int32)
+    split_dec = np.full(n_req, -1, np.int32)
+    up_v = np.zeros(n_req)     # client uplink, one-way (added post-hoc)
+    ship_v = np.zeros(n_req)   # encoder-state transfer (simulated in-line)
+    down_v = np.zeros(n_req)   # client downlink, one-way (added post-hoc)
+    true_enc: List[np.ndarray] = []
+    true_dec: List[np.ndarray] = []
+    if split_enabled:
+        for k, t in enumerate(tiers):
+            te, td = t.profile.true_leg_times(
+                stream.n, stream.m_out, np.random.default_rng(seed + 101 + k))
+            true_enc.append(te)
+            true_dec.append(td)
 
     # absolute deadlines (inf = none); None disables every deadline branch
     deadline_abs = None
@@ -542,15 +579,24 @@ def simulate_des(
 
     def start(i: int, k: int, now: float) -> None:
         nonlocal seq
+        if split_enabled and leg_of[i] == 1:
+            base = float(true_enc[k][i])
+        elif split_enabled and leg_of[i] == 2:
+            base = float(true_dec[k][i])
+        else:
+            base = float(true_exec[k][i])
         # continuous slot admission: the solo draw pays the per-sequence
         # overhead once per slot already live at its start (zero at zero
         # load, so the solo path stays bit-for-bit)
-        dur = float(true_exec[k][i]) \
+        dur = base \
             + (tiers[k].per_seq_overhead_s * busy[k]
                if tiers[k].continuous else 0.0)
         busy[k] += 1
-        t_start[i] = now
-        exec_used[i] = dur
+        if split_enabled and leg_of[i] == 2:
+            exec_used[i] += dur   # decode leg stacks on the encode leg
+        else:
+            t_start[i] = now
+            exec_used[i] = dur
         fin = now + dur
         heapq.heappush(heap, (fin, seq, _FINISH, k))
         seq += 1
@@ -570,6 +616,7 @@ def simulate_des(
         finish_req[(fin, seq - 1)] = tuple(ids)
 
     finish_req: Dict = {}
+    xfer_req: Dict = {}
 
     def shed_request(i: int, k: int, now: float, admitted: bool) -> None:
         """Deadline miss: drop ``i`` (predicted or certain to miss)."""
@@ -623,9 +670,58 @@ def simulate_des(
             qd = [scheduler.queue_delay(k, pred_backlog[k], in_system[k],
                                         tiers[k].servers)
                   for k in range(k_tiers)]
-            d = scheduler.decide_fast(float(stream.n[i]), float(m_hats[i]),
-                                      now, qd)
+            d = (scheduler.decide_plan_fast(float(stream.n[i]),
+                                            float(m_hats[i]), now, qd)
+                 if split_enabled else
+                 scheduler.decide_fast(float(stream.n[i]), float(m_hats[i]),
+                                       now, qd))
             k = d.tier
+            if split_enabled and d.plan is not None and d.plan.is_split:
+                e, kd = d.plan.encode_tier, d.plan.decode_tier
+                # two-leg service needs plain (unbatched, non-continuous)
+                # stations on both legs, a ground-truth inter-tier link,
+                # no deadline, and room on both stations
+                eligible = (
+                    (e, kd) in inter_links
+                    and batchers[e] is None and not tiers[e].continuous
+                    and batchers[kd] is None and not tiers[kd].continuous
+                    and (deadline_abs is None
+                         or not np.isfinite(deadline_abs[i]))
+                    and has_space(e) and has_space(kd))
+                if eligible:
+                    n_i = float(stream.n[i])
+                    if tiers[e].link is not None:
+                        up_v[i] = (float(tiers[e].link.rtt_at(now)) / 2.0
+                                   + n_i * bpt * 8.0
+                                   / tiers[e].link.bandwidth_bps)
+                    if tiers[kd].link is not None:
+                        down_v[i] = (float(tiers[kd].link.rtt_at(now)) / 2.0
+                                     + float(stream.m_out[i]) * bpt * 8.0
+                                     / tiers[kd].link.bandwidth_bps)
+                    inter = inter_links[(e, kd)]
+                    ship_v[i] = (
+                        float(inter.rtt_at(now)) / 2.0
+                        + float(scheduler.activation.payload_bytes(n_i))
+                        * 8.0 / inter.bandwidth_bps)
+                    leg_of[i] = 1
+                    split_mask[i] = True
+                    split_enc[i] = e
+                    split_dec[i] = kd
+                    tier_of[i] = kd   # reported tier = decode placement
+                    m_e = scheduler.tiers[e].model
+                    pred_exec[i] = max(m_e.alpha_n * n_i + 0.5 * m_e.beta,
+                                       0.0)
+                    pred_backlog[e] += pred_exec[i]
+                    in_system[e] += 1
+                    if events is not None:
+                        events.append((now, "arrival", i, e))
+                    if busy[e] < slots[e]:
+                        start(i, e, now)
+                    else:
+                        queues[e].append(i)
+                    continue
+                # degrade to the best whole placement
+                k = scheduler._select(list(d.t_pred))
             if not has_space(k):
                 ranked = sorted(range(k_tiers), key=lambda j: d.t_pred[j])
                 dl = None if deadline_abs is None else float(deadline_abs[i])
@@ -670,12 +766,46 @@ def simulate_des(
                 batchers[k].add(i, length=int(stream.n[i]))
             else:
                 queues[k].append(i)
+        elif kind == _XARR:
+            # encoder states reached the decode tier: queue the second leg
+            i = xfer_req.pop((now, sq))
+            k = k_fin
+            leg_of[i] = 2
+            m_d = scheduler.tiers[k].model
+            pred_exec[i] = max(
+                m_d.alpha_m * float(m_hats[i]) + 0.5 * m_d.beta, 0.0)
+            pred_backlog[k] += pred_exec[i]
+            in_system[k] += 1
+            if events is not None:
+                events.append((now, "xfer", i, k))
+            if busy[k] < slots[k]:
+                start(i, k, now)
+            else:
+                queues[k].append(i)
         else:
             done = finish_req.pop((now, sq))
             members = done if isinstance(done, tuple) else (done,)
             k = k_fin
             busy[k] -= 1
             for i in members:
+                if split_enabled and leg_of[i] == 1:
+                    # encode leg done: ship the activations; completion
+                    # bookkeeping waits for the decode leg
+                    pred_backlog[k] = max(pred_backlog[k] - pred_exec[i],
+                                          0.0)
+                    in_system[k] -= 1
+                    if events is not None:
+                        events.append((now, "encode_done", i, k))
+                    if tiers[k].link is not None:
+                        scheduler.observe_rtt(
+                            k, now, float(tiers[k].link.rtt_at(
+                                float(stream.t_arrival_s[i]))))
+                    x_at = now + float(ship_v[i])
+                    heapq.heappush(heap,
+                                   (x_at, seq, _XARR, int(split_dec[i])))
+                    seq += 1
+                    xfer_req[(x_at, seq - 1)] = i
+                    continue
                 t_finish[i] = now
                 pred_backlog[k] = max(pred_backlog[k] - pred_exec[i], 0.0)
                 in_system[k] -= 1
@@ -691,6 +821,13 @@ def simulate_des(
                     # completions rewind the estimator's clock.
                     scheduler.observe_rtt(k, now,
                                           float(tiers[k].link.rtt_at(arr)))
+                if split_enabled and leg_of[i] == 2:
+                    # completed split: feed the inter-tier link estimator;
+                    # leg samples are half-planes, so skip the calibrator
+                    e = int(split_enc[i])
+                    scheduler.links.observe(
+                        e, k, now, float(inter_links[(e, k)].rtt_at(arr)))
+                    continue
                 if calibrator is not None:
                     due = calibrator.record(k, float(stream.n[i]),
                                             float(stream.m_out[i]),
@@ -708,6 +845,16 @@ def simulate_des(
     exec_s = np.where(ok, exec_used, 0.0)
     wait = np.where(ok, t_start - stream.t_arrival_s, 0.0)
     latency = np.where(ok, wait + exec_s + tx_s, np.nan)
+    if split_enabled and split_mask.any():
+        # split requests: tx = up + ship + down (all one-way); latency
+        # follows the event timeline (which embeds ship and both waits)
+        # plus the post-hoc client legs; wait is the residual so the
+        # latency = wait + exec + tx invariant holds by construction
+        sm = split_mask & ok
+        tx_s = np.where(sm, up_v + ship_v + down_v, tx_s)
+        latency = np.where(
+            sm, (t_finish - stream.t_arrival_s) + up_v + down_v, latency)
+        wait = np.where(sm, latency - exec_s - tx_s, wait)
     return DESResult(
         policy=scheduler.name,
         tier_names=[t.name for t in tiers],

@@ -32,6 +32,8 @@ the staleness probe — never runs backwards.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import math
 from typing import Optional
 
 
@@ -87,6 +89,98 @@ class TxEstimator:
             self.n_probes += 1
         return self._estimate
 
-    def tx_time(self, now_s: float, payload_bytes: float, probe_fn=None) -> float:
-        """T_tx estimate = RTT + payload serialization at the known bandwidth."""
-        return self.rtt(now_s, probe_fn) + payload_bytes * 8.0 / self.bandwidth_bps
+    def tx_time(self, now_s: float, payload_bytes: float, probe_fn=None,
+                *, one_way: bool = False) -> float:
+        """T_tx estimate = RTT + payload serialization at the known bandwidth.
+
+        ``one_way=True`` prices a single direction (``rtt/2`` + the same
+        serialization term) — the cost of SHIPPING a payload to the
+        other end without waiting for a response, which is what an
+        inter-tier activation transfer pays (the decode leg continues on
+        the receiving tier; nothing comes back over this link).
+        """
+        rtt = self.rtt(now_s, probe_fn)
+        if one_way:
+            rtt = rtt / 2.0
+        return rtt + payload_bytes * 8.0 / self.bandwidth_bps
+
+
+class LinkModel:
+    """Pairwise tier-to-tier link matrix (ROADMAP 5d).
+
+    The single gateway→cloud :class:`TxEstimator` of the paper covers
+    exactly one hop.  Cross-tier model partitioning (encoder on tier i,
+    decoder on tier j) needs the i→j leg priced too, and hierarchical
+    topologies (device→edge→cloud) must pay *both* hops when no direct
+    link exists.  ``LinkModel`` keeps one :class:`TxEstimator` per
+    registered directed pair and composes multi-hop paths:
+
+    * ``tx_time(i, j, ...)`` — 0.0 for ``i == j``; the direct link's
+      estimate when registered; otherwise the cheapest relay path over
+      registered links (each hop paying its own RTT + serialization);
+      ``math.inf`` when no path exists (callers treat that plan as
+      infeasible).
+    * ``observe(i, j, now, rtt)`` — feed a timestamped RTT sample into
+      the direct link's estimator (§II-C, per link).
+
+    Estimators are per *direction*; ``add_link(..., symmetric=True)``
+    (the default) registers the reverse direction with its own
+    independent estimator so asymmetric routes can drift apart.
+    """
+
+    def __init__(self, n_tiers: int):
+        if n_tiers < 1:
+            raise ValueError("need at least one tier")
+        self.n_tiers = n_tiers
+        self._links: dict = {}
+
+    def add_link(self, i: int, j: int, estimator: TxEstimator, *,
+                 symmetric: bool = True) -> "LinkModel":
+        if i == j:
+            raise ValueError("a tier has no link to itself")
+        for k in (i, j):
+            if not (0 <= k < self.n_tiers):
+                raise ValueError(f"tier index {k} out of range")
+        self._links[(i, j)] = estimator
+        if symmetric and (j, i) not in self._links:
+            self._links[(j, i)] = dataclasses.replace(estimator)
+        return self
+
+    def link(self, i: int, j: int) -> Optional[TxEstimator]:
+        return self._links.get((i, j))
+
+    def has_path(self, i: int, j: int) -> bool:
+        return math.isfinite(self.tx_time(i, j, 0.0, 0.0))
+
+    def tx_time(self, i: int, j: int, now_s: float, payload_bytes: float,
+                *, one_way: bool = False) -> float:
+        """Predicted transfer time i→j; composes relay hops when no
+        direct link is registered (device→edge→cloud pays both hops —
+        each hop's RTT *and* a re-serialization of the payload)."""
+        if i == j:
+            return 0.0
+        direct = self._links.get((i, j))
+        if direct is not None:
+            return direct.tx_time(now_s, payload_bytes, one_way=one_way)
+        # Dijkstra over registered directed links (tiny K: fine)
+        dist = {i: 0.0}
+        frontier = [(0.0, i)]
+        while frontier:
+            d, u = heapq.heappop(frontier)
+            if u == j:
+                return d
+            if d > dist.get(u, math.inf):
+                continue
+            for (a, b), est in self._links.items():
+                if a != u:
+                    continue
+                nd = d + est.tx_time(now_s, payload_bytes, one_way=one_way)
+                if nd < dist.get(b, math.inf):
+                    dist[b] = nd
+                    heapq.heappush(frontier, (nd, b))
+        return math.inf
+
+    def observe(self, i: int, j: int, now_s: float, rtt_s: float) -> None:
+        est = self._links.get((i, j))
+        if est is not None:
+            est.observe(now_s, rtt_s)

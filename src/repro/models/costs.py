@@ -25,6 +25,7 @@ import dataclasses
 from typing import Dict
 
 from repro.models.config import LayerGroup, ModelConfig
+from repro.core.latency_model import ActivationCostModel
 
 
 def _attn_flops(cfg: ModelConfig, t: int, tk: float, *, cross: bool = False,
@@ -170,6 +171,27 @@ def recurrent_state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
             h = cfg.d_model // r.head_dim
             total += (h * r.head_dim * r.head_dim + 2 * cfg.d_model) * g.count
     return total * dtype_bytes
+
+
+def activation_cost_model(cfg: ModelConfig,
+                          dtype_bytes: int = 2) -> ActivationCostModel:
+    """Encoder-state wire size for a big-model config (bf16 default)."""
+    return ActivationCostModel(d_model=cfg.d_model, dtype_bytes=dtype_bytes)
+
+
+def nmt_activation_cost(model, dtype_bytes: int = 4) -> ActivationCostModel:
+    """Encoder-state wire size for an NMT model (fp32 default on CPU).
+
+    Works for any of the three seed NMT models: transformer configs
+    expose ``d_model``, the RNN configs expose ``hidden``.  For the GRU
+    the shipped state is a single fixed-size context vector, so
+    ``n x hidden`` is a conservative upper bound rather than exact —
+    fine for scheduling (it only makes the GRU's split plans look
+    slightly worse than they are).
+    """
+    cfg = model.cfg if hasattr(model, "cfg") else model
+    d = getattr(cfg, "d_model", None) or cfg.hidden
+    return ActivationCostModel(d_model=int(d), dtype_bytes=dtype_bytes)
 
 
 @dataclasses.dataclass(frozen=True)

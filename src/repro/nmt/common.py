@@ -279,6 +279,91 @@ def batched_greedy_decode(decode_step, init_state, batch: int, max_len: int,
                              keep_eos=False, forced=forced_len is not None)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EncoderStates:
+    """The wire format of a split placement's encoder→decoder hand-off.
+
+    ``data`` is the model-specific encoder output pytree (hidden state
+    for the GRU, annotation vectors + carries for the BiLSTM, memory +
+    mask for the transformer); ``src_lens`` (B,) int32 carries the true
+    source lengths so the decode tier can rebuild ragged masks without
+    re-reading the tokens.  Registered as a pytree so it passes through
+    ``jax.jit`` boundaries and serializes leaf-by-leaf.
+    """
+
+    data: object
+    src_lens: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.data, self.src_lens), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, src_lens = children
+        return cls(data, src_lens)
+
+    @property
+    def batch(self) -> int:
+        return int(self.src_lens.shape[0])
+
+    def payload_bytes(self) -> int:
+        """Actual wire size: sum of leaf nbytes (what a split executor
+        reports to the engine, vs. the scheduler's a-priori
+        ``ActivationCostModel`` estimate)."""
+        leaves = jax.tree_util.tree_leaves((self.data, self.src_lens))
+        return int(sum(np.asarray(leaf).size * np.asarray(leaf).dtype.itemsize
+                       for leaf in leaves))
+
+
+def build_encode_states(model, params, encode_data):
+    """Shared scaffolding behind the models' ``make_encode_states``.
+
+    ``encode_data(src (B,N), src_mask (B,N)) -> pytree`` is the
+    model-specific encoder pass; the wrapper jits it and packs the
+    result into :class:`EncoderStates` with the per-row source lengths.
+    """
+    @jax.jit
+    def run(src, src_mask):
+        data = encode_data(src, src_mask)
+        lens = jnp.sum((src_mask > 0).astype(jnp.int32), axis=-1)
+        return EncoderStates(data, lens)
+
+    def encode_states(src, src_mask=None):
+        src = jnp.asarray(src, jnp.int32)
+        if src_mask is None:
+            src_mask = jnp.ones(src.shape, jnp.float32)
+        return run(src, jnp.asarray(src_mask))
+
+    return encode_states
+
+
+def build_decode_from_states(model, params, state_from_data):
+    """Shared scaffolding behind the models' ``make_decode_from_states``.
+
+    ``state_from_data(data) -> batched decode state`` rebuilds the
+    model's decode-step carry from the shipped :class:`EncoderStates`
+    payload (identity for the RNNs; the transformer re-derives its
+    cross-attention K/V cache decoder-side so only the raw memory
+    crosses the wire).  The decode itself is the exact
+    :func:`batched_greedy_decode` scan the fused path runs — parity with
+    ``make_translate_batched`` is pinned bit-for-bit in tests.
+    """
+    step = lambda st, tok: model.decode_step(params, st, tok)
+
+    @functools.partial(jax.jit, static_argnames=("forced_len",))
+    def run(states, forced_len=None):
+        state = state_from_data(states.data)
+        batch = states.src_lens.shape[0]
+        return batched_greedy_decode(step, state, batch,
+                                     model.cfg.max_decode_len, forced_len)
+
+    def decode_from_states(states, forced_len=None):
+        return run(states, forced_len=forced_len)
+
+    return decode_from_states
+
+
 def build_translate_batched(model, params, make_state, *,
                             compiled: bool = True):
     """Shared scaffolding behind the models' ``make_translate_batched``.

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.nmt.common import (
     RNNConfig,
+    build_decode_from_states,
+    build_encode_states,
     build_translate_batched,
     cross_entropy,
     dense,
@@ -88,6 +90,19 @@ class GRUSeq2Seq:
             self, params,
             lambda src, mask: self.encode(params, src, mask),
             compiled=compiled)
+
+    def make_encode_states(self, params):
+        """Encode leg of a split placement: (B,N) [+ mask] ->
+        :class:`EncoderStates` carrying the final hidden state (B,H) —
+        the GRU's fixed-size context is the whole payload."""
+        return build_encode_states(
+            self, params,
+            lambda src, mask: self.encode(params, src, mask))
+
+    def make_decode_from_states(self, params):
+        """Decode leg: EncoderStates -> (lengths, tokens); the shipped
+        hidden state IS the decode carry, no rebuild needed."""
+        return build_decode_from_states(self, params, lambda data: data)
 
     def forward_teacher(self, params, src, src_mask, tgt_in):
         def single(src_i, mask_i, tgt_i):

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 
 from repro.nmt.common import (
     RNNConfig,
+    build_decode_from_states,
+    build_encode_states,
     build_translate_batched,
     cross_entropy,
     dense,
@@ -152,6 +154,20 @@ class BiLSTMSeq2Seq:
 
         return build_translate_batched(self, params, make_state,
                                        compiled=compiled)
+
+    def make_encode_states(self, params):
+        """Encode leg of a split placement: ships the decode-step state
+        verbatim — (carries, annotation vectors (B,N,H), enc mask)."""
+        def encode_data(src, mask):
+            enc_outs, carries, m = self.encode(params, src, mask)
+            return (carries, enc_outs, m)
+
+        return build_encode_states(self, params, encode_data)
+
+    def make_decode_from_states(self, params):
+        """Decode leg: EncoderStates -> (lengths, tokens); shipped data
+        is already the decode carry."""
+        return build_decode_from_states(self, params, lambda data: data)
 
     # ------------------------------------------------------------- train
     def forward_teacher(self, params, src, src_mask, tgt_in):

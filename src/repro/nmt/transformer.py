@@ -41,6 +41,8 @@ import jax.numpy as jnp
 
 from repro.nmt.common import (
     TransformerConfig,
+    build_decode_from_states,
+    build_encode_states,
     build_translate_batched,
     cross_entropy,
     dense,
@@ -383,6 +385,27 @@ class MarianTransformer:
 
         return build_translate_batched(self, params, make_state,
                                        compiled=compiled)
+
+    def make_encode_states(self, params):
+        """Encode leg of a split placement: ships only the encoder
+        memory (B,N,D) + mask — NOT the decoder cache.  The cross-
+        attention K/V projections use *decoder* parameters, so they are
+        rebuilt on the decode tier (see ``make_decode_from_states``),
+        keeping the wire payload at n x d_model as the scheduler's
+        `ActivationCostModel` prices it."""
+        return build_encode_states(
+            self, params,
+            lambda src, mask: self.encode(params, src, mask))
+
+    def make_decode_from_states(self, params):
+        """Decode leg: rebuilds the KV cache (cross K/V projections +
+        empty self K/V) from the shipped memory, then runs the exact
+        compiled scan decode of the fused path."""
+        def state_from_data(data):
+            enc_outs, m = data
+            return self.init_cache(params, enc_outs, m)
+
+        return build_decode_from_states(self, params, state_from_data)
 
     # -------------------------------------------------------------- train
     def forward_teacher(self, params, src, src_mask, tgt_in):

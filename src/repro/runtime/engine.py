@@ -83,14 +83,19 @@ import numpy as np
 
 from repro.core.calibration import OnlineCalibrator
 from repro.data.pipeline import TokenBatcher
-from repro.core.latency_model import DeviceProfile, bytes_for_tokens
+from repro.core.latency_model import (
+    ActivationCostModel,
+    DeviceProfile,
+    bytes_for_tokens,
+)
 from repro.core.length_regressor import LinearN2M
 from repro.core.scheduler import (
     MultiTierDecision,
     MultiTierScheduler,
+    PlacementPlan,
     SchedTier,
 )
-from repro.core.tx_estimator import TxEstimator
+from repro.core.tx_estimator import LinkModel, TxEstimator
 
 
 @dataclasses.dataclass
@@ -131,6 +136,13 @@ class Tier:
     # ContinuousGenerationSession — marks the tier for serve_continuous's
     # in-flight batching (slot-table space replaces server space there)
     continuous_session: Optional[object] = None
+    # Split-placement legs (from serving.make_split_tier_executors): the
+    # tier can run just the encoder (tokens -> EncoderStates) and/or just
+    # the decoder (EncoderStates -> (m_out, tokens)).  Both tiers of a
+    # split plan need their respective leg for REAL execution; otherwise
+    # the engine models the leg times from the profile planes.
+    encode_executor: Optional[Callable] = None
+    decode_executor: Optional[Callable] = None
 
     def __post_init__(self):
         if self.name is None:
@@ -254,6 +266,10 @@ class RequestResult:
     tier_name: str = ""
     deadline_s: Optional[float] = None   # relative SLO, None = no deadline
     shed: bool = False    # dropped by deadline-aware admission control
+    # the executed placement; None on the scalar path, whole(device) or
+    # split(e, d) when the plan-aware scheduler routed the request —
+    # ``device`` stays the DECODE tier either way
+    plan: Optional[PlacementPlan] = None
 
     @property
     def slo_met(self) -> Optional[bool]:
@@ -287,7 +303,12 @@ class CollaborativeEngine:
                  bytes_per_token: int = 2,
                  hedge_margin_s: float = 0.0,
                  seed: int = 0,
-                 refit_interval: Optional[int] = None):
+                 refit_interval: Optional[int] = None,
+                 links: Optional[LinkModel] = None,
+                 inter_rtt_fns: Optional[Dict] = None,
+                 activation: Optional[ActivationCostModel] = None,
+                 allow_split: bool = False,
+                 explore_eps: float = 0.0):
         if tiers is None:
             if edge is None or cloud is None or rtt_fn is None:
                 raise ValueError("pass tiers=[...] or edge/cloud/rtt_fn")
@@ -316,9 +337,15 @@ class CollaborativeEngine:
             else n2m
         self.scheduler = MultiTierScheduler(
             sched_tiers, n2m_model, bytes_per_token=bytes_per_token,
-            hedge_margin_s=hedge_margin_s)
+            hedge_margin_s=hedge_margin_s,
+            links=links, activation=activation, allow_split=allow_split,
+            explore_eps=explore_eps, explore_seed=seed)
         self.calibrator = None if refit_interval is None else \
             OnlineCalibrator(len(self.tiers), interval=refit_interval)
+        # ground-truth RTT processes for inter-tier links, keyed (i, j);
+        # the scheduler's LinkModel holds the *estimators* those feed
+        self._inter_rtt_fns = dict(inter_rtt_fns or {})
+        self.split_count = 0
 
         self._occ = [_TierOccupancy(t.servers, t.batch_size,
                                     t.per_seq_overhead_s)
@@ -362,15 +389,106 @@ class CollaborativeEngine:
         now = self._now() if now_s is None else now_s
         n = int(len(tokens))
         qd = [occ.queue_delay(now) for occ in self._occ]
-        d = self.scheduler.decide(n, now, qd)
+        if self.scheduler._split_ready():
+            d = self.scheduler.decide_plan(n, now, qd)
+        else:
+            d = self.scheduler.decide(n, now, qd)
         k = self._admit(d, now, deadline_s)
         if k < 0:                       # shed: never enters any queue
             return self._shed(n, d, deadline_s)
+        if (d.plan is not None and d.plan.is_split
+                and k == d.plan.decode_tier
+                and self._has_space(d.plan.encode_tier, now)):
+            return self._submit_split(np.asarray(tokens, np.int32), d, now,
+                                      deadline_s)
         tier = self.tiers[k]
         m_out, exec_s = tier.run(tokens, d.m_hat, self.rng)
         wait, service_s = self._occ[k].assign(now, exec_s)
         return self._complete(k, d, n, m_out, exec_s, wait, service_s, now,
                               deadline_s)
+
+    # -------------------------------------------------------- split plans --
+    def _ship_time(self, e: int, k: int, now: float,
+                   payload_bytes: float) -> float:
+        """True one-way activation-shipping time e→k, feeding the link's
+        estimator when a ground-truth RTT process is registered."""
+        fn = self._inter_rtt_fns.get((e, k))
+        est = self.scheduler.links.link(e, k)
+        if fn is not None:
+            rtt = float(fn(now))
+            if est is not None:
+                self.scheduler.links.observe(e, k, now, rtt)
+            bw = est.bandwidth_bps if est is not None else 100e6
+            return rtt / 2.0 + payload_bytes * 8.0 / bw
+        # no truth process: the estimate is the model (multi-hop included)
+        return self.scheduler.links.tx_time(e, k, now, payload_bytes,
+                                            one_way=True)
+
+    def _client_leg(self, k: int, now: float, tokens: float) -> float:
+        """One-way client-link time for ``tokens`` tokens to/from tier k
+        (0 for a local tier): rtt/2 + serialization."""
+        tier = self.tiers[k]
+        if tier.rtt_fn is None:
+            return 0.0
+        rtt = float(tier.rtt_fn(now))
+        tx = self.scheduler.tiers[k].tx
+        if tx is not None:
+            tx.observe(now, rtt)
+        payload = float(bytes_for_tokens(tokens, self.scheduler.bytes_per_token))
+        return rtt / 2.0 + payload * 8.0 / tier.bandwidth_bps
+
+    def _submit_split(self, tokens: np.ndarray, d: MultiTierDecision,
+                      now: float, deadline_s: Optional[float]
+                      ) -> RequestResult:
+        """Execute a split plan: encode on tier e, ship the encoder
+        states over the e→d link, decode on tier d.  Both legs' occupancy
+        is charged (the decode leg joining tier d's virtual queue at its
+        states-arrival time), and every traversed link feeds its RTT
+        estimator.  With real split executors on both tiers the leg times
+        are measured wall-clock and the payload is the states' actual
+        wire size; otherwise legs are modelled from the profile planes
+        (``DeviceProfile.true_leg_times``) and the payload priced by the
+        scheduler's ActivationCostModel."""
+        plan = d.plan
+        e, k = plan.encode_tier, plan.decode_tier
+        enc_tier, dec_tier = self.tiers[e], self.tiers[k]
+        n = int(len(tokens))
+        real = (enc_tier.encode_executor is not None
+                and dec_tier.decode_executor is not None)
+        if real:
+            t0 = time.perf_counter()
+            states = enc_tier.encode_executor(tokens)
+            t_enc = time.perf_counter() - t0
+            payload = float(states.payload_bytes())
+            t0 = time.perf_counter()
+            m_out, _ = dec_tier.decode_executor(states)
+            t_dec = time.perf_counter() - t0
+            m_out = int(m_out)
+        else:
+            t_enc = float(enc_tier.profile.true_leg_times(
+                float(n), d.m_hat, self.rng)[0])
+            t_dec = float(dec_tier.profile.true_leg_times(
+                float(n), d.m_hat, self.rng)[1])
+            payload = float(self.scheduler.activation.payload_bytes(n))
+            m_out = int(max(round(d.m_hat), 1))
+
+        up = self._client_leg(e, now, n)
+        wait_e, svc_e = self._occ[e].assign(now, t_enc)
+        ship = self._ship_time(e, k, now, payload)
+        dec_arrival = now + up + wait_e + svc_e + ship
+        wait_d, svc_d = self._occ[k].assign(dec_arrival, t_dec)
+        down = self._client_leg(k, now, m_out)
+        latency = up + wait_e + svc_e + ship + wait_d + svc_d + down
+
+        res = RequestResult(self._next_id, k, n, m_out, latency, d,
+                            wait_s=wait_e + wait_d, tier_name=dec_tier.name,
+                            deadline_s=deadline_s, plan=plan)
+        self._next_id += 1
+        self.results.append(res)
+        self.split_count += 1
+        # calibrator feedback skipped: leg samples are half-planes
+        # (alpha_n-only / alpha_m-only) and would corrupt the full fit
+        return res
 
     def _shed(self, n: int, d: MultiTierDecision,
               deadline_s: Optional[float]) -> RequestResult:
@@ -408,7 +526,9 @@ class CollaborativeEngine:
 
         res = RequestResult(self._next_id, k, n, m_out, latency, d,
                             wait_s=wait, tier_name=tier.name,
-                            deadline_s=deadline_s)
+                            deadline_s=deadline_s,
+                            plan=(PlacementPlan.whole(k)
+                                  if d.plan is not None else None))
         self._next_id += 1
         self.results.append(res)
         if self.calibrator is not None:
@@ -449,16 +569,26 @@ class CollaborativeEngine:
         results: List[Optional[RequestResult]] = [None] * len(requests)
         groups: Dict[int, List[tuple]] = {}
         pending = [0] * len(self.tiers)
+        split_ready = self.scheduler._split_ready()
         for i, tokens in enumerate(requests):
             tokens = np.asarray(tokens, np.int32)
             n = int(len(tokens))
             qd = [occ.queue_delay(now) for occ in self._occ]
-            d = self.scheduler.decide(n, now, qd)
+            d = (self.scheduler.decide_plan(n, now, qd) if split_ready
+                 else self.scheduler.decide(n, now, qd))
             k = self._admit(d, now, deadline_s, pending)
             if k < 0:
                 results[i] = self._shed(n, d, deadline_s)
                 continue
             pending[k] += 1
+            if (d.plan is not None and d.plan.is_split
+                    and k == d.plan.decode_tier
+                    and self._has_space(d.plan.encode_tier, now, pending)):
+                # split members run per-request: their decode leg enters
+                # tier k's virtual queue at its own states-arrival time,
+                # which a shared batch block could not represent
+                results[i] = self._submit_split(tokens, d, now, deadline_s)
+                continue
             groups.setdefault(k, []).append((i, tokens, d))
 
         for k, members in groups.items():
@@ -729,5 +859,6 @@ class CollaborativeEngine:
             "rejected": int(self.rejected.sum()),
             "shed": n_shed,
             "slo_attainment": slo,
+            "split": self.split_count,
             "tx_estimate_s": 0.0 if tx is None else tx.rtt(0.0),
         }

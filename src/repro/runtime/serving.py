@@ -174,6 +174,42 @@ def make_batched_tier_executor(session: "GenerationSession", *,
     return executor
 
 
+def make_split_tier_executors(model, params, *,
+                              vocab_clip: Optional[int] = None
+                              ) -> Tuple[Callable, Callable]:
+    """Adapt an NMT model into the two LEGS of a split placement.
+
+    Returns ``(encode_executor, decode_executor)`` for
+    :class:`~repro.runtime.engine.Tier`:
+
+    * ``encode_executor(tokens) -> EncoderStates`` runs just the encoder
+      (1-D int token array in, shippable pytree out);
+    * ``decode_executor(states) -> (m_out, out_tokens)`` resumes from the
+      shipped states and runs the compiled scan decode.
+
+    ``decode_executor(encode_executor(t))`` is bit-for-bit the fused
+    ``make_translate_batched`` path (pinned in tests) — splitting is a
+    placement choice, never a quality change.  Give the encode tier the
+    first and the decode tier the second; a tier serving both legs of
+    different requests can carry both.
+    """
+    encode_states = model.make_encode_states(params)
+    decode_from_states = model.make_decode_from_states(params)
+
+    def encode_executor(tokens: np.ndarray):
+        toks = np.asarray(tokens, np.int32)[None, :]
+        if vocab_clip is not None:
+            toks = np.minimum(toks, vocab_clip - 1)
+        return encode_states(toks)
+
+    def decode_executor(states):
+        lens, out = decode_from_states(states)
+        m = int(np.asarray(lens)[0])
+        return m, np.asarray(out, np.int32)[0, :max(m, 1)]
+
+    return encode_executor, decode_executor
+
+
 class GenerationSession:
     """Greedy batched generation on CPU (reduced configs).
 

@@ -26,6 +26,7 @@ def test_every_example_is_covered():
         "collaborative_serving.py",
         "continuous_serving.py",
         "multitier_serving.py",
+        "partitioned_serving.py",
         "quickstart.py",
         "train_nmt.py",
     ]

@@ -1,0 +1,423 @@
+"""PR 7: PlacementPlan partitioned placement — scheduler, links, NMT
+split parity, engine, and two-leg DES.
+
+The load-bearing pins:
+
+* with splits disabled, the plan scheduler is BIT-FOR-BIT the scalar
+  scheduler (``decide_plan`` ≡ ``decide``, fast variants too), and the
+  two-leg DES is bit-for-bit the single-leg DES;
+* a degenerate split ``split(k, k)`` prices exactly like ``whole(k)``;
+* ``encode() -> EncoderStates -> decode_from_states()`` reproduces the
+  fused translate exactly on all three paper models;
+* ε-greedy exploration recovers a mis-calibrated tier the argmin alone
+  would never probe again.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.latency_model import (ActivationCostModel, DeviceProfile,
+                                      LinearLatencyModel)
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import ConnectionProfile
+from repro.core.scheduler import (MultiTierScheduler, PlacementPlan,
+                                  SchedTier)
+from repro.core.simulator import RequestStream, SimTier, simulate_des
+from repro.core.tx_estimator import LinkModel, TxEstimator
+from repro.runtime.engine import CollaborativeEngine, Tier
+
+_DEV = (3e-4, 5e-3, 2e-3)
+_EDGE = (2e-5, 2.5e-3, 4e-3)
+_CLOUD = (1e-5, 1e-4, 2e-3)
+
+
+def _links(backbone_bps=1e9):
+    links = LinkModel(3)
+    links.add_link(1, 2, TxEstimator(init_rtt_s=4e-3,
+                                     bandwidth_bps=backbone_bps))
+    return links
+
+
+def _sched(*, allow_split=False, links=None, activation=None, **kw):
+    tiers = [
+        SchedTier("dev", LinearLatencyModel(*_DEV), None),
+        SchedTier("edge", LinearLatencyModel(*_EDGE),
+                  TxEstimator(init_rtt_s=5e-3, bandwidth_bps=200e6)),
+        SchedTier("cloud", LinearLatencyModel(*_CLOUD),
+                  TxEstimator(init_rtt_s=90e-3, bandwidth_bps=20e6)),
+    ]
+    n2m = LinearN2M().fit(np.arange(1.0, 300.0), np.arange(1.0, 300.0))
+    return MultiTierScheduler(tiers, n2m, links=links,
+                              activation=activation,
+                              allow_split=allow_split, **kw)
+
+
+def _split_sched(**kw):
+    return _sched(allow_split=True, links=_links(),
+                  activation=ActivationCostModel(512, 4), **kw)
+
+
+# ------------------------------------------------------- PlacementPlan --
+def test_placement_plan_identities():
+    assert PlacementPlan.whole(2) == PlacementPlan.split(2, 2)
+    assert not PlacementPlan.whole(1).is_split
+    assert PlacementPlan.split(1, 2).is_split
+    assert PlacementPlan.split(1, 2) != PlacementPlan.split(2, 1)
+
+
+def test_degenerate_split_prices_as_whole():
+    s = _split_sched()
+    for n in (4.0, 64.0, 200.0):
+        d = s.decide_fast(n, n, 0.0)
+        for k in range(3):
+            assert s.plan_cost_fast(PlacementPlan.split(k, k), n, n, 0.0) \
+                == d.t_pred[k]
+
+
+# ------------------------------------------------- one-way tx + links --
+def test_tx_time_one_way_halves_rtt_only():
+    tx = TxEstimator(init_rtt_s=0.080, bandwidth_bps=1e8)
+    ser = 1e6 * 8.0 / 1e8
+    assert tx.tx_time(0.0, 1e6) == pytest.approx(0.080 + ser)
+    assert tx.tx_time(0.0, 1e6, one_way=True) == pytest.approx(0.040 + ser)
+
+
+def test_link_model_direct_self_and_unreachable():
+    links = LinkModel(3)
+    links.add_link(0, 1, TxEstimator(init_rtt_s=0.010, bandwidth_bps=1e8))
+    assert links.tx_time(0, 0, 0.0, 1e6) == 0.0
+    assert links.tx_time(0, 1, 0.0, 0.0) == pytest.approx(0.010)
+    assert links.tx_time(1, 0, 0.0, 0.0) == pytest.approx(0.010)  # symmetric
+    assert not links.has_path(0, 2)
+    assert links.tx_time(0, 2, 0.0, 1.0) == np.inf
+
+
+def test_link_model_composes_multi_hop():
+    links = LinkModel(3)
+    links.add_link(0, 1, TxEstimator(init_rtt_s=0.010, bandwidth_bps=1e8))
+    links.add_link(1, 2, TxEstimator(init_rtt_s=0.020, bandwidth_bps=2e8))
+    # 0 -> 2 has no direct link: composes both hops, each paying its own
+    # RTT and re-serialization
+    expect = (0.010 + 1e6 * 8 / 1e8) + (0.020 + 1e6 * 8 / 2e8)
+    assert links.tx_time(0, 2, 0.0, 1e6) == pytest.approx(expect)
+    assert links.has_path(0, 2)
+
+
+def test_link_model_observe_feeds_direct_estimator():
+    links = LinkModel(2)
+    links.add_link(0, 1, TxEstimator(init_rtt_s=0.050, bandwidth_bps=1e8,
+                                     mode="last"))
+    links.observe(0, 1, 1.0, 0.004)
+    assert links.link(0, 1).rtt(2.0) == pytest.approx(0.004)
+    # the symmetric reverse estimator is an independent copy
+    assert links.link(1, 0).rtt(2.0) == pytest.approx(0.050)
+
+
+def test_link_model_rejects_bad_pairs():
+    links = LinkModel(2)
+    with pytest.raises(ValueError):
+        links.add_link(0, 0, TxEstimator())
+    with pytest.raises(ValueError):
+        links.add_link(0, 5, TxEstimator())
+
+
+# --------------------------------------- splits-disabled equivalence --
+@pytest.mark.property
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(min_value=1, max_value=300),
+       now=st.floats(min_value=0.0, max_value=100.0),
+       q0=st.floats(min_value=0.0, max_value=0.5),
+       q2=st.floats(min_value=0.0, max_value=0.5))
+def test_plan_scheduler_disabled_equals_scalar(n, now, q0, q2):
+    """decide_plan(_fast) with splits disabled ≡ decide(_fast), exactly."""
+    qd = [q0, 0.0, q2]
+    a, b = _sched(), _sched()
+    d0 = a.decide(float(n), now, qd)
+    d1 = b.decide_plan(float(n), now, qd)
+    assert d1.tier == d0.tier
+    assert d1.t_pred == d0.t_pred            # bit-for-bit
+    assert d1.m_hat == d0.m_hat
+    assert d1.plan == PlacementPlan.whole(d0.tier)
+    f0 = a.decide_fast(float(n), float(n), now, qd)
+    f1 = b.decide_plan_fast(float(n), float(n), now, qd)
+    assert f1.tier == f0.tier
+    assert f1.t_pred == f0.t_pred
+
+
+def test_split_requires_links_and_activation():
+    # links without activation (and vice versa) never split
+    s = _sched(allow_split=True, links=_links())
+    assert not s._split_ready()
+    s = _sched(allow_split=True,
+               activation=ActivationCostModel(512, 4))
+    assert not s._split_ready()
+    assert _split_sched()._split_ready()
+
+
+def test_split_plan_chosen_in_the_classic_regime():
+    """Cheap edge encoder + fast cloud decoder behind a slow client WAN
+    with a fat backbone: encode-at-edge/decode-in-cloud must win."""
+    d = _split_sched().decide_plan_fast(128.0, 128.0, 0.0)
+    assert d.plan == PlacementPlan.split(1, 2)
+    assert d.tier == 2                       # reported tier = decode leg
+    # and the split's predicted cost is strictly below every whole plan
+    s = _split_sched()
+    split_cost = s.plan_cost_fast(PlacementPlan.split(1, 2), 128.0, 128.0,
+                                  0.0)
+    assert all(split_cost < t for t in d.t_pred)
+
+
+def test_activation_payload_prices_the_split():
+    """A fatter activation payload must make the same split cost more."""
+    thin = _sched(allow_split=True, links=_links(1e7),
+                  activation=ActivationCostModel(64, 2))
+    fat = _sched(allow_split=True, links=_links(1e7),
+                 activation=ActivationCostModel(2048, 4))
+    p = PlacementPlan.split(1, 2)
+    assert fat.plan_cost_fast(p, 128.0, 128.0, 0.0) \
+        > thin.plan_cost_fast(p, 128.0, 128.0, 0.0)
+
+
+# ------------------------------------------------------------ ε-greedy --
+def test_explore_eps_zero_is_inert():
+    """eps=0 must not touch the RNG or the staleness counters."""
+    s = _sched()
+    state_before = s._explore_rng.bit_generator.state
+    for n in (8.0, 64.0, 190.0):
+        s.decide_fast(n, n, 0.0)
+    assert s._explore_rng.bit_generator.state == state_before
+    assert s._since_pick == [0, 0, 0]
+    assert s.n_explored == 0
+
+
+def test_explore_eps_probes_stale_tiers():
+    s = _sched(explore_eps=0.3, explore_seed=1)
+    picks = [s.decide_fast(64.0, 64.0, 0.0).tier for _ in range(100)]
+    assert s.n_explored > 0
+    assert len(set(picks)) > 1               # stale tiers were probed
+
+
+# ------------------------------------------------------- NMT parity ----
+def _models():
+    from repro.nmt import (BiLSTMSeq2Seq, GRUSeq2Seq, MarianTransformer,
+                           RNNConfig, TransformerConfig)
+    rnn = RNNConfig(vocab_src=64, vocab_tgt=64, embed=32, hidden=32,
+                    layers=2, max_decode_len=24)
+    tf = TransformerConfig(vocab_src=64, vocab_tgt=64, d_model=32, heads=4,
+                           d_ff=64, enc_layers=2, dec_layers=2,
+                           max_decode_len=24)
+    return [GRUSeq2Seq(rnn), BiLSTMSeq2Seq(rnn), MarianTransformer(tf)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", _models(),
+                         ids=lambda m: type(m).__name__)
+def test_split_decode_matches_fused_exactly(model):
+    import jax
+
+    params = model.init(jax.random.PRNGKey(0))
+    fused = model.make_translate_batched(params)
+    encode = model.make_encode_states(params)
+    decode = model.make_decode_from_states(params)
+
+    rng = np.random.default_rng(3)
+    lens = [10, 7, 4]
+    n_max = max(lens)
+    src = np.zeros((len(lens), n_max), np.int32)
+    mask = np.zeros((len(lens), n_max), np.float32)
+    for b, ln in enumerate(lens):
+        src[b, :ln] = rng.integers(3, 64, ln)
+        mask[b, :ln] = 1.0
+
+    for forced in (None, 6):
+        lens_f, toks_f = fused(src, mask, forced_len=forced) \
+            if forced is not None else fused(src, mask)
+        states = encode(src, mask)
+        assert states.payload_bytes() > 0
+        assert states.batch == len(lens)
+        lens_s, toks_s = decode(states, forced_len=forced) \
+            if forced is not None else decode(states)
+        assert np.array_equal(np.asarray(lens_f), np.asarray(lens_s))
+        assert np.array_equal(np.asarray(toks_f), np.asarray(toks_s))
+
+
+def test_encoder_states_is_a_pytree():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.nmt.common import EncoderStates
+
+    st_ = EncoderStates(data=(jnp.ones((2, 3, 4)),),
+                        src_lens=jnp.array([3, 2]))
+    leaves = jax.tree_util.tree_leaves(st_)
+    assert len(leaves) == 2
+    out = jax.jit(lambda s: s)(st_)          # passes through jit intact
+    assert isinstance(out, EncoderStates)
+    assert out.payload_bytes() == 2 * 3 * 4 * 4 + 2 * st_.src_lens.dtype.itemsize
+
+
+# ------------------------------------------------------------- engine --
+def _engine_tiers():
+    return [
+        Tier(DeviceProfile("dev", LinearLatencyModel(*_DEV), 0.05),
+             name="dev"),
+        Tier(DeviceProfile("edge", LinearLatencyModel(*_EDGE), 0.05),
+             name="edge", rtt_fn=lambda t: 5e-3, bandwidth_bps=200e6),
+        Tier(DeviceProfile("cloud", LinearLatencyModel(*_CLOUD), 0.05),
+             name="cloud", rtt_fn=lambda t: 90e-3, bandwidth_bps=20e6),
+    ]
+
+
+def _run_engine(**kw):
+    eng = CollaborativeEngine(n2m=LinearN2M(1.0, 0.0),
+                              tiers=_engine_tiers(), seed=0, **kw)
+    rng = np.random.default_rng(11)
+    for i in range(60):
+        eng.submit(np.ones(int(rng.integers(8, 200)), np.int32),
+                   now_s=float(i) * 0.2)
+    return eng
+
+
+def test_engine_split_disabled_is_bitwise_vanilla():
+    base = _run_engine()
+    capable = _run_engine(links=_links(),
+                          activation=ActivationCostModel(512, 4),
+                          inter_rtt_fns={(1, 2): lambda t: 4e-3},
+                          allow_split=False)
+    for a, b in zip(base.results, capable.results):
+        assert a.device == b.device
+        assert a.latency_s == b.latency_s    # bit-for-bit
+        assert a.m_out == b.m_out
+    assert capable.split_count == 0
+
+
+def test_engine_executes_split_plans():
+    eng = _run_engine(links=_links(),
+                      activation=ActivationCostModel(512, 4),
+                      inter_rtt_fns={(1, 2): lambda t: 4e-3},
+                      allow_split=True)
+    split = [r for r in eng.results if r.plan is not None and r.plan.is_split]
+    assert eng.stats()["split"] == eng.split_count == len(split) > 0
+    for r in split:
+        assert r.plan == PlacementPlan.split(1, 2)
+        assert r.device == 2                 # device = decode tier
+        assert r.latency_s > 0
+
+
+def test_engine_explore_recovers_miscalibrated_tier():
+    """A tier believed awful (but actually fast) is dead to the argmin;
+    ε-greedy probes feed the calibrator real samples and win it back."""
+    slow = DeviceProfile("slow", LinearLatencyModel(1e-4, 5e-3, 1e-3), 0.02)
+    fast = DeviceProfile("fast", LinearLatencyModel(1e-5, 1e-4, 1e-3), 0.02)
+    believed_awful = DeviceProfile("fast", LinearLatencyModel(1.0, 1.0, 1.0),
+                                   0.02)
+
+    def run(eps):
+        eng = CollaborativeEngine(
+            n2m=LinearN2M(1.0, 0.0),
+            tiers=[Tier(dataclasses.replace(slow, model=slow.model)),
+                   Tier(dataclasses.replace(believed_awful,
+                                            model=believed_awful.model))],
+            seed=0, refit_interval=32, explore_eps=eps)
+        eng.tiers[1].profile = fast          # ground truth executes fast
+        rng = np.random.default_rng(5)
+        for i in range(300):
+            eng.submit(np.zeros(int(rng.integers(8, 120)), np.int32),
+                       now_s=float(i))
+        late = [r.device for r in eng.results[-100:]]
+        return eng, np.mean(np.asarray(late) == 1)
+
+    eng_greedy, frac_greedy = run(0.0)
+    eng_explore, frac_explore = run(0.25)
+    # pure argmin never probes the believed-awful tier, so it never learns
+    assert frac_greedy == 0.0
+    # exploration feeds the refit real samples; the tier wins the traffic
+    assert eng_explore.scheduler.n_explored > 0
+    assert frac_explore > 0.5
+    assert eng_explore.scheduler.tiers[1].model.alpha_m < 1e-2
+
+
+# ------------------------------------------------------------- DES -----
+def _const_profile(rtt_s, bw):
+    return ConnectionProfile(name="c", times_s=np.array([0.0, 3600.0]),
+                             rtt_s=np.array([rtt_s, rtt_s]),
+                             bandwidth_bps=bw)
+
+
+def _stream(n_req=150, seed=0):
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(0.05, n_req))
+    ns = rng.integers(8, 200, n_req).astype(np.float64)
+    return RequestStream(t_arrival_s=arr, n=ns, m_out=ns.copy(),
+                         m_real=ns.copy())
+
+
+def _sim_tiers():
+    return [
+        SimTier("dev", DeviceProfile("dev", LinearLatencyModel(*_DEV),
+                                     0.05)),
+        SimTier("edge", DeviceProfile("edge", LinearLatencyModel(*_EDGE),
+                                      0.05),
+                link=_const_profile(5e-3, 200e6)),
+        SimTier("cloud", DeviceProfile("cloud", LinearLatencyModel(*_CLOUD),
+                                       0.05),
+                link=_const_profile(90e-3, 20e6)),
+    ]
+
+
+def test_des_split_disabled_is_bitwise_identical():
+    """The two-leg DES with splits unavailable — by scheduler config or
+    by missing inter_links — is the single-leg DES, bit for bit."""
+    stream = _stream()
+    base = simulate_des(_sched(), stream, _sim_tiers(), seed=7)
+    no_inter = simulate_des(_split_sched(), stream, _sim_tiers(), seed=7)
+    off = simulate_des(_sched(allow_split=False, links=_links(),
+                              activation=ActivationCostModel(512, 4)),
+                       stream, _sim_tiers(), seed=7,
+                       inter_links={(1, 2): _const_profile(4e-3, 1e9)})
+    for r in (no_inter, off):
+        assert np.array_equal(base.tier, r.tier)
+        assert np.array_equal(base.latency_s, r.latency_s, equal_nan=True)
+        assert np.array_equal(base.wait_s, r.wait_s)
+        assert np.array_equal(base.exec_s, r.exec_s)
+        assert np.array_equal(base.tx_s, r.tx_s)
+        assert np.array_equal(base.t_finish_s, r.t_finish_s)
+
+
+def test_des_two_leg_service():
+    """Split-enabled DES: splits actually happen, each pays both legs,
+    and latency = wait + exec + tx holds for every served request."""
+    stream = _stream()
+    res = simulate_des(_split_sched(), stream, _sim_tiers(), seed=7,
+                       inter_links={(1, 2): _const_profile(4e-3, 1e9)},
+                       collect_events=True)
+    xfers = [e for e in res.events if e[1] == "xfer"]
+    assert len(xfers) > 0
+    ok = res.served & (res.tier >= 0)
+    resid = res.latency_s[ok] - (res.wait_s[ok] + res.exec_s[ok]
+                                 + res.tx_s[ok])
+    assert np.max(np.abs(resid)) < 1e-9
+    assert np.all(res.wait_s[ok] >= -1e-12)
+    assert np.all(res.latency_s[ok] > 0)
+    # split requests report the decode tier and their exec covers both
+    # legs (strictly above the decode leg's floor of 1e-6)
+    split_ids = {e[2] for e in xfers}
+    for i in split_ids:
+        assert res.tier[i] == 2
+        assert res.exec_s[i] > 0
+
+
+def test_des_split_beats_whole_in_the_classic_regime():
+    rng = np.random.default_rng(1)
+    n_req = 200
+    arr = np.cumsum(rng.exponential(0.2, n_req))
+    ns = rng.integers(64, 192, n_req).astype(np.float64)
+    stream = RequestStream(t_arrival_s=arr, n=ns, m_out=ns.copy(),
+                           m_real=ns.copy())
+    base = simulate_des(_sched(), stream, _sim_tiers(), seed=3)
+    part = simulate_des(_split_sched(), stream, _sim_tiers(), seed=3,
+                        inter_links={(1, 2): _const_profile(4e-3, 1e9)})
+    assert np.nanmean(part.latency_s) < np.nanmean(base.latency_s)

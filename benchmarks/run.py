@@ -14,6 +14,8 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
                (DES rate x slots sweep + real slot-table execution)
   partition  — encoder/decoder split placement vs whole-request offload
                (backbone bandwidth x length sweep + two-leg DES replay)
+  faults     — fault-tolerant serving: injected tier outages / link
+               blackholes, no-retry baseline vs breaker-masked failover
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -84,6 +86,14 @@ def main() -> None:
                                  out_json="BENCH_partition.json")
     else:
         _, csv = partitioned.run(out_json="BENCH_partition.json")
+    csv_all += csv
+
+    from benchmarks import fault_tolerance
+    if fast:
+        _, csv = fault_tolerance.run(n_requests=4000,
+                                     out_json="BENCH_faults.json")
+    else:
+        _, csv = fault_tolerance.run(out_json="BENCH_faults.json")
     csv_all += csv
 
     from benchmarks import roofline

@@ -1,0 +1,97 @@
+"""Fault-tolerant collaborative serving: outages, failover, breakers.
+
+Part 1 replays the same request stream through the CollaborativeEngine
+twice against an injected mid-run cloud outage (a deterministic
+:class:`FaultSchedule` — the DES and the engine consume the same
+object):
+
+* ``retry=None``  — the no-retry baseline: an attempt that hits the
+  dead tier is lost after the detection time.
+* ``retry=RetryPolicy()`` — failover: the failed attempt re-enters the
+  router with the dead tier masked, the tier's circuit breaker opens
+  after consecutive failures and steers later requests away up front,
+  and a half-open probe rediscovers the tier once the outage ends.
+
+Part 2 crashes a REAL executor: :func:`make_faulty_executor` wraps the
+edge's ``tokens -> (m_out, out)`` callable so chosen calls raise
+:class:`TierFaultError` through the engine's execution boundary — the
+same failover loop catches it and re-dispatches to the cloud.
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_serving.py
+(REPRO_SMOKE=1 shrinks the request stream for the examples smoke test.)
+"""
+
+import os
+
+import numpy as np
+
+from repro.core.faults import FaultSchedule, RetryPolicy, TierOutage
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import make_profile
+from repro.runtime.engine import CollaborativeEngine, Tier
+from repro.runtime.serving import TierFaultError, make_faulty_executor
+
+SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
+N_REQ = 120 if SMOKE else 400
+RATE_HZ = 20.0
+
+edge_prof = DeviceProfile("edge", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.0)
+cloud_prof = DeviceProfile("cloud", LinearLatencyModel(4e-4, 1.6e-3, 0.002),
+                           0.0)
+profile = make_profile("cp2", seed=7)
+
+span = N_REQ / RATE_HZ
+faults = FaultSchedule(outages=(TierOutage(1, 0.2 * span, 0.6 * span),))
+print(f"== part 1: cloud outage {faults.outages[0].start_s:.1f}s -> "
+      f"{faults.outages[0].end_s:.1f}s over a {span:.0f}s stream ==")
+
+
+def build(retry):
+    return CollaborativeEngine(
+        edge=Tier(edge_prof), cloud=Tier(cloud_prof),
+        n2m=LinearN2M(1.0, 0.0),
+        rtt_fn=lambda t: float(profile.rtt_at(t)),
+        seed=0, faults=faults, retry=retry)
+
+
+rng = np.random.default_rng(3)
+lengths = rng.integers(2, 200, N_REQ)
+for name, retry in (("no-retry", None), ("failover", RetryPolicy())):
+    eng = build(retry)
+    for i, n in enumerate(lengths):
+        eng.submit(np.zeros(int(n), np.int32), now_s=i / RATE_HZ)
+    s = eng.stats()
+    print(f"  {name:9s} availability={s['availability']:.3f} "
+          f"lost={s['fault_lost']} retries={s['retries']} "
+          f"failovers={s['failovers']} "
+          f"breaker_opens={s['breaker_opens']} "
+          f"mean_attempts={s['mean_attempts']:.3f}")
+
+print("== part 2: a REAL executor that crashes (TierFaultError) ==")
+
+
+def toy_translate(tokens):
+    # stand-in for a GenerationSession executor: echo-length "translation"
+    return len(tokens), np.asarray(tokens, np.int32)
+
+
+crashing = make_faulty_executor(toy_translate, {1, 2},
+                                message="edge process killed")
+eng = CollaborativeEngine(
+    edge=Tier(edge_prof, executor=crashing), cloud=Tier(cloud_prof),
+    n2m=LinearN2M(1.0, 0.0),
+    rtt_fn=lambda t: 5.0,               # WAN so bad the edge always wins...
+    seed=0, retry=RetryPolicy())
+# ...except when its executor crashes: calls 1 and 2 raise inside
+# tier.run and the failover loop re-dispatches them to the cloud
+for i in range(4):
+    r = eng.submit(np.zeros(4, np.int32), now_s=float(i))
+    print(f"  req {i}: device={'edge' if r.device == 0 else 'cloud'} "
+          f"attempts={r.attempts} failed_tiers={r.failed_tiers}")
+assert crashing.calls["faults"] == 2, crashing.calls
+try:
+    make_faulty_executor(toy_translate, {0})(np.zeros(4, np.int32))
+except TierFaultError as e:
+    print(f"  raw executor raise: {type(e).__name__}: {e}")
+print("done.")

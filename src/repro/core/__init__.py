@@ -9,6 +9,9 @@ Pipeline (paper §II):
   6. ``profiles``          — RIPE-Atlas-like RTT connection profiles (Fig. 4).
   7. ``calibration``       — offline T_exe characterization (measured or
                              roofline-derived).
+  8. ``faults``            — deterministic fault injection + retry/circuit
+                             breaker policies for fault-tolerant serving
+                             (beyond paper).
 """
 
 from repro.core.length_regressor import (
@@ -37,6 +40,14 @@ from repro.core.scheduler import (
     StaticScheduler,
     EDGE,
     CLOUD,
+)
+from repro.core.faults import (
+    CircuitBreaker,
+    FaultSchedule,
+    LinkFault,
+    RetryPolicy,
+    Straggler,
+    TierOutage,
 )
 from repro.core.profiles import ConnectionProfile, make_profile
 from repro.core.simulator import (
@@ -73,6 +84,12 @@ __all__ = [
     "StaticScheduler",
     "EDGE",
     "CLOUD",
+    "CircuitBreaker",
+    "FaultSchedule",
+    "LinkFault",
+    "RetryPolicy",
+    "Straggler",
+    "TierOutage",
     "ConnectionProfile",
     "make_profile",
     "DESResult",

@@ -216,9 +216,22 @@ class OnlineCalibrator:
         self._since_refit = 0
         self.n_recorded = 0
         self.n_refits = 0
+        self.n_excluded = 0
 
-    def record(self, tier: int, n: float, m_out: float, t_exe_s: float) -> bool:
-        """Ingest one completion; True when a refit is due."""
+    def record(self, tier: int, n: float, m_out: float, t_exe_s: float,
+               ok: bool = True) -> bool:
+        """Ingest one completion; True when a refit is due.
+
+        ``ok=False`` marks a failed/timed-out request: its ``t_exe_s``
+        is a timeout artifact, not a device measurement, and its
+        ``m_out`` is whatever the failure left behind — feeding either
+        into the plane fit or the N→M regressor would corrupt the
+        latency model, so the sample is counted (``n_excluded``) and
+        dropped without advancing the refit clock.
+        """
+        if not ok:
+            self.n_excluded += 1
+            return False
         self._samples[tier].append((float(n), float(m_out), float(t_exe_s)))
         self.n_recorded += 1
         self._since_refit += 1

@@ -42,6 +42,7 @@ Beyond paper
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -249,7 +250,8 @@ class MultiTierScheduler(BaseScheduler):
         return (self.allow_split and self.links is not None
                 and self.activation is not None)
 
-    def _explore_override(self, chosen: int) -> int:
+    def _explore_override(self, chosen: int,
+                          exclude: Optional[frozenset] = None) -> int:
         """ε-greedy cold-start probing of starved tiers (ROADMAP 5a).
 
         A tier whose believed plane is too slow never wins the argmin,
@@ -266,7 +268,11 @@ class MultiTierScheduler(BaseScheduler):
         for i in range(len(self._since_pick)):
             self._since_pick[i] += 1
         if self._explore_rng.random() < self.explore_eps:
-            starved = int(np.argmax(self._since_pick))
+            # never probe an excluded (unhealthy) tier — exploration is
+            # for mis-calibration recovery, not for hammering dead tiers
+            cands = [i for i in range(len(self._since_pick))
+                     if not exclude or i not in exclude]
+            starved = max(cands, key=self._since_pick.__getitem__)
             if starved != chosen:
                 self.n_explored += 1
                 chosen = starved
@@ -319,12 +325,29 @@ class MultiTierScheduler(BaseScheduler):
         speedup = b * t1 / t_batch
         return backlog / (servers * speedup)
 
+    @staticmethod
+    def _mask_totals(totals: List[float],
+                     exclude: Optional[frozenset]) -> List[float]:
+        """Candidate mask for fault-tolerant routing: excluded tiers
+        (open circuit breakers, tiers that already failed this request)
+        price at infinity so the argmin — and every downstream
+        feasibility check ranked on ``t_pred`` — skips them.  ``exclude``
+        falsy returns ``totals`` untouched (the bit-for-bit default)."""
+        if not exclude:
+            return totals
+        return [math.inf if k in exclude else t
+                for k, t in enumerate(totals)]
+
     # ----------------------------------------------------------- decisions --
     def decide(self, n: int, now_s: float,
-               queue_delay_s: Optional[Sequence[float]] = None
+               queue_delay_s: Optional[Sequence[float]] = None,
+               *, exclude: Optional[frozenset] = None
                ) -> MultiTierDecision:
         """Single-request rule; ``queue_delay_s`` is the caller's per-tier
-        T_queue estimate (0.0 for every tier when omitted)."""
+        T_queue estimate (0.0 for every tier when omitted).  ``exclude``
+        removes unhealthy tiers from the candidate set (their predicted
+        totals become ``inf``); the caller guarantees at least one tier
+        stays eligible."""
         m_hat = self.m_hat(n)
         payload = float(bytes_for_tokens(n + m_hat, self.bytes_per_token))
         totals: List[float] = []
@@ -333,18 +356,21 @@ class MultiTierScheduler(BaseScheduler):
             t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
             q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
             totals.append(t_exe + t_tx + q)
-        pick = self._explore_override(self._select(totals))
+        totals = self._mask_totals(totals, exclude)
+        pick = self._explore_override(self._select(totals), exclude)
         return MultiTierDecision(pick, tuple(totals), m_hat)
 
     def decide_fast(self, n: float, m_hat: float, now_s: float,
-                    queue_delay_s: Optional[Sequence[float]] = None
+                    queue_delay_s: Optional[Sequence[float]] = None,
+                    *, exclude: Optional[frozenset] = None
                     ) -> MultiTierDecision:
         """float64 closed-form fast path (no jnp dispatch) for the
         discrete-event simulator — the same coefficient arithmetic as
         ``simulator._simulate_online``, so the empty-queue DES replay
         matches the analytic replay exactly."""
-        totals = self._whole_totals_fast(n, m_hat, now_s, queue_delay_s)
-        pick = self._explore_override(self._select(totals))
+        totals = self._mask_totals(
+            self._whole_totals_fast(n, m_hat, now_s, queue_delay_s), exclude)
+        pick = self._explore_override(self._select(totals), exclude)
         return MultiTierDecision(pick, tuple(totals), m_hat)
 
     def _whole_totals_fast(self, n: float, m_hat: float, now_s: float,
@@ -409,12 +435,16 @@ class MultiTierScheduler(BaseScheduler):
 
     def _plan_decision(self, n: float, m_hat: float, now_s: float,
                        queue_delay_s: Optional[Sequence[float]],
-                       totals: List[float]) -> MultiTierDecision:
+                       totals: List[float],
+                       exclude: Optional[frozenset] = None
+                       ) -> MultiTierDecision:
         """Shared tail of the plan-aware decide paths: run the whole-
         request selection (hedge + exploration, unchanged), then let a
-        split plan take over only when strictly cheaper."""
+        split plan take over only when strictly cheaper.  Split plans
+        touching an ``exclude``d tier are never considered — a leg on an
+        unhealthy tier is a guaranteed failover."""
         k0 = self._select(totals)
-        k = self._explore_override(k0)
+        k = self._explore_override(k0, exclude)
         whole = PlacementPlan.whole(k)
         if not self._split_ready() or k != k0:
             # splits off, or exploration forced a tier: whole-request plan
@@ -425,7 +455,7 @@ class MultiTierScheduler(BaseScheduler):
         best_plan, best_cost = whole, totals[k]
         for e in range(n_tiers):
             for d in range(n_tiers):
-                if e == d:
+                if e == d or (exclude and (e in exclude or d in exclude)):
                     continue
                 p = PlacementPlan.split(e, d)
                 c = self.plan_cost_fast(p, n, m_hat, now_s, queue_delay_s)
@@ -436,7 +466,8 @@ class MultiTierScheduler(BaseScheduler):
                                  plan=best_plan, plan_t_pred=plan_costs)
 
     def decide_plan(self, n: int, now_s: float,
-                    queue_delay_s: Optional[Sequence[float]] = None
+                    queue_delay_s: Optional[Sequence[float]] = None,
+                    *, exclude: Optional[frozenset] = None
                     ) -> MultiTierDecision:
         """Plan-aware single-request rule (jnp prediction path).
 
@@ -453,16 +484,20 @@ class MultiTierScheduler(BaseScheduler):
             t_tx = 0.0 if tier.tx is None else tier.tx.tx_time(now_s, payload)
             q = 0.0 if queue_delay_s is None else float(queue_delay_s[k])
             totals.append(t_exe + t_tx + q)
+        totals = self._mask_totals(totals, exclude)
         return self._plan_decision(float(n), m_hat, now_s, queue_delay_s,
-                                   totals)
+                                   totals, exclude)
 
     def decide_plan_fast(self, n: float, m_hat: float, now_s: float,
-                         queue_delay_s: Optional[Sequence[float]] = None
+                         queue_delay_s: Optional[Sequence[float]] = None,
+                         *, exclude: Optional[frozenset] = None
                          ) -> MultiTierDecision:
         """Plan-aware closed-form rule for the DES: `decide_fast`
         bit-for-bit when splits are disabled."""
-        totals = self._whole_totals_fast(n, m_hat, now_s, queue_delay_s)
-        return self._plan_decision(n, m_hat, now_s, queue_delay_s, totals)
+        totals = self._mask_totals(
+            self._whole_totals_fast(n, m_hat, now_s, queue_delay_s), exclude)
+        return self._plan_decision(n, m_hat, now_s, queue_delay_s, totals,
+                                   exclude)
 
     def decide_batch(self, n: np.ndarray, rtt: np.ndarray) -> np.ndarray:
         """Vectorized empty-queue rule (analytic-simulator counterpart of

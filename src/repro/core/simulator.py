@@ -79,6 +79,12 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.calibration import OnlineCalibrator
+from repro.core.faults import (
+    CircuitBreaker,
+    FaultSchedule,
+    RetryPolicy,
+    make_breakers,
+)
 from repro.core.latency_model import DeviceProfile, bytes_for_tokens
 from repro.core.profiles import ConnectionProfile
 from repro.core.scheduler import (
@@ -320,6 +326,7 @@ def table1_row(
 # ===================================================================== DES --
 _ARRIVAL, _FINISH, _XARR = 0, 1, 2   # _XARR: encoder states arrive at
                                      # a split plan's decode tier
+_DOWN, _UP, _RETRY = 3, 4, 5         # fault edges + retry re-dispatches
 
 
 @dataclasses.dataclass
@@ -386,6 +393,10 @@ class DESResult:
     shed: Optional[np.ndarray] = None   # per-request deadline-shed flags
     slo_s: Optional[np.ndarray] = None  # relative deadlines (inf = none)
     events: Optional[List] = None   # (time, kind, req, tier) as processed
+    # fault-tolerance extras (None unless faults/retry were armed)
+    attempts: Optional[np.ndarray] = None       # dispatches per request
+    retry_after_s: Optional[np.ndarray] = None  # backpressure hint on shed
+    fault_stats: Optional[Dict] = None          # availability/retry/... keys
 
     @property
     def served(self) -> np.ndarray:
@@ -434,7 +445,7 @@ class DESResult:
         wait = self.wait_s[srv]
         if lat.size == 0:              # everything shed: no latency stats
             lat = wait = np.array([np.nan])
-        return {
+        out = {
             "requests": float(len(self.tier)),
             "served": float(srv.sum()),
             "mean_latency_s": float(lat.mean()),
@@ -447,6 +458,9 @@ class DESResult:
             "slo_attainment": self.slo_attainment(),
             "throughput_rps": self.throughput_rps(),
         }
+        if self.fault_stats is not None:
+            out.update(self.fault_stats)
+        return out
 
 
 def simulate_des(
@@ -459,6 +473,9 @@ def simulate_des(
     calibrator: Optional[OnlineCalibrator] = None,
     collect_events: bool = False,
     inter_links: Optional[Dict] = None,
+    faults: Optional[FaultSchedule] = None,
+    retry: Optional[RetryPolicy] = None,
+    breaker: Optional[CircuitBreaker] = None,
 ) -> DESResult:
     """Event-driven replay of ``stream`` over N queued tiers.
 
@@ -495,6 +512,21 @@ def simulate_des(
     Client up/down legs are priced one-way and added post-hoc, exactly
     like whole-request T_tx.  With splits disabled the run is bit-for-bit
     identical to the single-leg simulator.
+
+    Fault injection (ISSUE 8): ``faults`` schedules tier outages, link
+    degradation/blackholes and straggler windows.  A crash fails all
+    in-flight AND queued work at the tier; a dispatch to a down (or
+    blackholed) tier fails after the detection time.  ``retry`` bounds
+    re-dispatches with exponential backoff + jitter and arms the
+    per-tier circuit breakers (cloned from ``breaker``) that mask
+    unhealthy tiers out of the placement argmin; ``retry=None`` is the
+    no-retry baseline — failed work is simply lost.  ``retry.replay_shed``
+    additionally replays deadline-shed requests after their
+    ``retry_after_s`` backpressure hint (ROADMAP 5c).  Split plans are
+    disabled while a non-empty schedule is armed (the engine, not the
+    DES, models mid-plan decode failover).  With ``faults=None`` — or an
+    EMPTY schedule — every path below is pinned bit-for-bit identical to
+    the fault-free simulator (tests enforce it).
     """
     k_tiers = len(tiers)
     if k_tiers != len(scheduler.tiers):
@@ -516,10 +548,35 @@ def simulate_des(
     # Everything below is gated on ``split_enabled``; with splits disabled
     # (no inter_links, or a scheduler without links/activation/allow_split)
     # the run is bit-for-bit identical to the single-leg simulator.
+    # ---- fault-tolerance state ------------------------------------------
+    # ``ft`` gates every injection branch; an EMPTY schedule leaves it off
+    # so arming the machinery cannot perturb a fault-free run.  Breakers
+    # (routing belief) exist only under a retry policy — ``retry=None``
+    # is the pre-fault-tolerance baseline where failures just lose work.
+    ft = faults is not None and not faults.empty
+    use_breakers = ft and retry is not None
+    breakers = make_breakers(k_tiers, breaker) if use_breakers else None
+    replay_armed = retry is not None and retry.replay_shed
+    arm_extras = faults is not None or retry is not None
+    rng_retry = np.random.default_rng(seed + 7777)
+    down = [False] * k_tiers
+    outstanding: List[set] = [set() for _ in range(k_tiers)]
+    req_failed: List[set] = [set() for _ in range(n_req)]
+    attempts = np.zeros(n_req, np.int64)
+    retries_used = np.zeros(n_req, np.int64)
+    replays_used = np.zeros(n_req, np.int64)
+    retry_after_v = np.full(n_req, np.nan)
+    tx_override = np.full(n_req, np.nan)
+    fault_failures = np.zeros(k_tiers, np.int64)
+    n_retries = n_replays = fault_lost = 0
+    retry_req: Dict = {}
+    _detect = (retry if retry is not None else RetryPolicy()).detect_s
+
     split_enabled = (
         inter_links is not None and len(inter_links) > 0
         and getattr(scheduler, "_split_ready", None) is not None
-        and scheduler._split_ready())
+        and scheduler._split_ready()
+        and not ft)
     leg_of = np.zeros(n_req, np.int8)   # 0 whole, 1 encode leg, 2 decode leg
     split_mask = np.zeros(n_req, bool)
     split_enc = np.full(n_req, -1, np.int32)
@@ -576,6 +633,18 @@ def simulate_des(
             for i in range(n_req)]
     heapq.heapify(heap)
     seq = n_req  # tie-break counter for events pushed during the run
+    if ft:
+        # outage edges become first-class events: _DOWN fails in-flight
+        # and queued work at the tier, _UP merely flips the ground truth
+        # back (the router rediscovers it via half-open probes)
+        for t_ev, kind_ev, k_ev in faults.outage_events():
+            if kind_ev == "down":
+                heapq.heappush(heap, (float(t_ev), seq, _DOWN, int(k_ev)))
+            elif kind_ev == "up":
+                heapq.heappush(heap, (float(t_ev), seq, _UP, int(k_ev)))
+            else:
+                continue   # link episodes are sampled at dispatch time
+            seq += 1
 
     def start(i: int, k: int, now: float) -> None:
         nonlocal seq
@@ -591,6 +660,23 @@ def simulate_des(
         dur = base \
             + (tiers[k].per_seq_overhead_s * busy[k]
                if tiers[k].continuous else 0.0)
+        if ft:
+            s = faults.slowdown(k, now)
+            if s != 1.0:           # straggler window: degraded, not failed
+                dur = dur * s
+            # reset first so a retry on a clean (or link-less) tier
+            # clears an override left by a degraded earlier attempt
+            tx_override[i] = np.nan
+            if tiers[k].link is not None:
+                # the true T_tx this request pays reflects the link's
+                # degradation episode at its (possibly retried) start
+                rf, bf = faults.link_factors(k, now)
+                if rf != 1.0 or bf != 1.0:
+                    tx_override[i] = (
+                        float(tiers[k].link.rtt_at(
+                            float(stream.t_arrival_s[i]))) * rf
+                        + float(payload_true[i]) * 8.0
+                        / (tiers[k].link.bandwidth_bps * bf))
         busy[k] += 1
         if split_enabled and leg_of[i] == 2:
             exec_used[i] += dur   # decode leg stacks on the encode leg
@@ -601,12 +687,18 @@ def simulate_des(
         heapq.heappush(heap, (fin, seq, _FINISH, k))
         seq += 1
         finish_req[(fin, seq - 1)] = i
+        if ft:
+            outstanding[k].add((fin, seq - 1))
 
     def start_batch(ids: List[int], k: int, now: float) -> None:
         nonlocal seq
         busy[k] += 1
         dur = max(float(true_exec[k][i]) for i in ids) \
             + tiers[k].per_seq_overhead_s * (len(ids) - 1)
+        if ft:
+            s = faults.slowdown(k, now)
+            if s != 1.0:
+                dur = dur * s
         for i in ids:
             t_start[i] = now
             exec_used[i] = dur
@@ -614,6 +706,8 @@ def simulate_des(
         heapq.heappush(heap, (fin, seq, _FINISH, k))
         seq += 1
         finish_req[(fin, seq - 1)] = tuple(ids)
+        if ft:
+            outstanding[k].add((fin, seq - 1))
 
     finish_req: Dict = {}
     xfer_req: Dict = {}
@@ -663,109 +757,245 @@ def simulate_des(
                     continue
                 start(j, k, now)
 
+    # ---- fault-tolerance helpers (all no-ops when ft is off) ------------
+    def push_retry(i: int, t: float) -> None:
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, _RETRY, -1))
+        retry_req[(t, seq)] = i
+        seq += 1
+
+    def breaker_mask(now: float) -> set:
+        """Tiers the routing belief refuses to dispatch to right now
+        (an OPEN breaker past its cool-down admits the caller as the
+        half-open probe, so probing happens through normal dispatch)."""
+        if not use_breakers:
+            return set()
+        return {j for j in range(k_tiers) if not breakers[j].allow(now)}
+
+    def probe_after(now: float) -> float:
+        if not use_breakers:
+            return 0.0
+        return min(b.time_to_probe(now) for b in breakers)
+
+    def fault_shed(i: int, now: float, retry_after: float) -> None:
+        nonlocal fault_lost
+        shed[i] = True
+        fault_lost += 1
+        retry_after_v[i] = retry_after
+        if events is not None:
+            events.append((now, "fault_shed", i, -1))
+
+    def fail_attempt(i: int, k: int, now: float, blackhole: bool) -> None:
+        """One failed dispatch/in-flight attempt on tier k: trip the
+        breaker, then either schedule the bounded retry (after the
+        detection time + backoff with jitter) or lose the request —
+        ``retry=None`` is the no-retry baseline."""
+        nonlocal n_retries
+        fault_failures[k] += 1
+        req_failed[i].add(k)
+        if use_breakers:
+            breakers[k].record_failure(now)
+        detect = _detect(blackhole)
+        if events is not None:
+            events.append((now, "fault", i, k))
+        if retry is not None and retries_used[i] < retry.max_retries:
+            retries_used[i] += 1
+            n_retries += 1
+            push_retry(i, now + detect
+                       + retry.backoff(int(retries_used[i]) - 1, rng_retry))
+        else:
+            fault_shed(i, now + detect, probe_after(now + detect))
+
+    def dispatch(i: int, now: float) -> None:
+        """Route + admit one (possibly re-tried/replayed) request — the
+        PR-1 arrival body, with unhealthy tiers masked out of the argmin
+        and injected failures intercepting the dispatch."""
+        nonlocal n_replays
+        if arm_extras:
+            attempts[i] += 1
+        qd = [scheduler.queue_delay(k, pred_backlog[k], in_system[k],
+                                    tiers[k].servers)
+              for k in range(k_tiers)]
+        excl = None
+        if ft:
+            mask = set(req_failed[i]) | breaker_mask(now)
+            if len(mask) >= k_tiers:
+                # this request has failed everywhere once — its history
+                # may be stale (a tier can have restarted), so keep only
+                # the breaker belief
+                mask = breaker_mask(now)
+            if len(mask) >= k_tiers:
+                # every tier dark: graceful degradation bottoms out here
+                fault_shed(i, now, probe_after(now))
+                return
+            excl = frozenset(mask) if mask else None
+        d = (scheduler.decide_plan_fast(float(stream.n[i]),
+                                        float(m_hats[i]), now, qd,
+                                        exclude=excl)
+             if split_enabled else
+             scheduler.decide_fast(float(stream.n[i]), float(m_hats[i]),
+                                   now, qd, exclude=excl))
+        k = d.tier
+        if split_enabled and d.plan is not None and d.plan.is_split:
+            e, kd = d.plan.encode_tier, d.plan.decode_tier
+            # two-leg service needs plain (unbatched, non-continuous)
+            # stations on both legs, a ground-truth inter-tier link,
+            # no deadline, and room on both stations
+            eligible = (
+                (e, kd) in inter_links
+                and batchers[e] is None and not tiers[e].continuous
+                and batchers[kd] is None and not tiers[kd].continuous
+                and (deadline_abs is None
+                     or not np.isfinite(deadline_abs[i]))
+                and has_space(e) and has_space(kd))
+            if eligible:
+                n_i = float(stream.n[i])
+                if tiers[e].link is not None:
+                    up_v[i] = (float(tiers[e].link.rtt_at(now)) / 2.0
+                               + n_i * bpt * 8.0
+                               / tiers[e].link.bandwidth_bps)
+                if tiers[kd].link is not None:
+                    down_v[i] = (float(tiers[kd].link.rtt_at(now)) / 2.0
+                                 + float(stream.m_out[i]) * bpt * 8.0
+                                 / tiers[kd].link.bandwidth_bps)
+                inter = inter_links[(e, kd)]
+                ship_v[i] = (
+                    float(inter.rtt_at(now)) / 2.0
+                    + float(scheduler.activation.payload_bytes(n_i))
+                    * 8.0 / inter.bandwidth_bps)
+                leg_of[i] = 1
+                split_mask[i] = True
+                split_enc[i] = e
+                split_dec[i] = kd
+                tier_of[i] = kd   # reported tier = decode placement
+                m_e = scheduler.tiers[e].model
+                pred_exec[i] = max(m_e.alpha_n * n_i + 0.5 * m_e.beta,
+                                   0.0)
+                pred_backlog[e] += pred_exec[i]
+                in_system[e] += 1
+                if events is not None:
+                    events.append((now, "arrival", i, e))
+                if busy[e] < slots[e]:
+                    start(i, e, now)
+                else:
+                    queues[e].append(i)
+                return
+            # degrade to the best whole placement
+            k = scheduler._select(list(d.t_pred))
+        if not has_space(k):
+            ranked = sorted(range(k_tiers), key=lambda j: d.t_pred[j])
+            if excl is not None:
+                # unhealthy tiers are not re-route targets either
+                ranked = [j for j in ranked if j not in excl]
+            dl = None if deadline_abs is None else float(deadline_abs[i])
+            if dl is None or not np.isfinite(dl):
+                # PR-1 semantics: next-best tier with space, else force
+                for j in ranked:
+                    if has_space(j):
+                        k = j
+                        break
+                else:
+                    overflow[k] += 1  # everything full: force-enqueue
+            else:
+                # deadline-aware: cheapest tier with space whose
+                # predicted completion meets the deadline; else shed
+                # (force-enqueue only if the preferred full tier is
+                # still predicted to make it).
+                spaced = [j for j in ranked if has_space(j)]
+                feasible = [j for j in spaced
+                            if now + d.t_pred[j] <= dl]
+                if feasible:
+                    k = feasible[0]
+                elif not spaced and now + d.t_pred[k] <= dl:
+                    overflow[k] += 1
+                else:
+                    # retry-after backpressure (ROADMAP 5c): a client
+                    # honoring the hint re-submits after the predicted
+                    # queue drain instead of losing the request outright
+                    ra = max(min(qd), 0.0)
+                    if (replay_armed
+                            and replays_used[i] < retry.max_retries):
+                        ra = max(ra, retry.backoff_base_s)
+                        if now + ra <= dl:
+                            replays_used[i] += 1
+                            n_replays += 1
+                            retry_after_v[i] = ra
+                            if events is not None:
+                                events.append((now, "backpressure", i, k))
+                            push_retry(i, now + ra)
+                            return
+                    retry_after_v[i] = ra
+                    shed_request(i, k, now, admitted=False)
+                    return
+        if ft and (down[k] or (tiers[k].link is not None
+                               and faults.link_blackhole(k, now))):
+            # injected failure at dispatch: the schedule is ground truth
+            # the router only experiences through this failed attempt
+            fail_attempt(i, k, now, blackhole=not down[k])
+            return
+        tier_of[i] = k
+        pe = (scheduler.tiers[k].model.alpha_n * float(stream.n[i])
+              + scheduler.tiers[k].model.alpha_m * float(m_hats[i])
+              + scheduler.tiers[k].model.beta)
+        pred_exec[i] = max(pe, 0.0)
+        pred_backlog[k] += pred_exec[i]
+        in_system[k] += 1
+        if events is not None:
+            events.append((now, "arrival", i, k))
+        if busy[k] < slots[k]:
+            if batchers[k] is not None:
+                start_batch([i], k, now)
+            else:
+                start(i, k, now)
+        elif batchers[k] is not None:
+            batchers[k].add(i, length=int(stream.n[i]))
+        else:
+            queues[k].append(i)
+
     while heap:
         now, sq, kind, k_fin = heapq.heappop(heap)
         if kind == _ARRIVAL:
-            i = sq
-            qd = [scheduler.queue_delay(k, pred_backlog[k], in_system[k],
-                                        tiers[k].servers)
-                  for k in range(k_tiers)]
-            d = (scheduler.decide_plan_fast(float(stream.n[i]),
-                                            float(m_hats[i]), now, qd)
-                 if split_enabled else
-                 scheduler.decide_fast(float(stream.n[i]), float(m_hats[i]),
-                                       now, qd))
-            k = d.tier
-            if split_enabled and d.plan is not None and d.plan.is_split:
-                e, kd = d.plan.encode_tier, d.plan.decode_tier
-                # two-leg service needs plain (unbatched, non-continuous)
-                # stations on both legs, a ground-truth inter-tier link,
-                # no deadline, and room on both stations
-                eligible = (
-                    (e, kd) in inter_links
-                    and batchers[e] is None and not tiers[e].continuous
-                    and batchers[kd] is None and not tiers[kd].continuous
-                    and (deadline_abs is None
-                         or not np.isfinite(deadline_abs[i]))
-                    and has_space(e) and has_space(kd))
-                if eligible:
-                    n_i = float(stream.n[i])
-                    if tiers[e].link is not None:
-                        up_v[i] = (float(tiers[e].link.rtt_at(now)) / 2.0
-                                   + n_i * bpt * 8.0
-                                   / tiers[e].link.bandwidth_bps)
-                    if tiers[kd].link is not None:
-                        down_v[i] = (float(tiers[kd].link.rtt_at(now)) / 2.0
-                                     + float(stream.m_out[i]) * bpt * 8.0
-                                     / tiers[kd].link.bandwidth_bps)
-                    inter = inter_links[(e, kd)]
-                    ship_v[i] = (
-                        float(inter.rtt_at(now)) / 2.0
-                        + float(scheduler.activation.payload_bytes(n_i))
-                        * 8.0 / inter.bandwidth_bps)
-                    leg_of[i] = 1
-                    split_mask[i] = True
-                    split_enc[i] = e
-                    split_dec[i] = kd
-                    tier_of[i] = kd   # reported tier = decode placement
-                    m_e = scheduler.tiers[e].model
-                    pred_exec[i] = max(m_e.alpha_n * n_i + 0.5 * m_e.beta,
-                                       0.0)
-                    pred_backlog[e] += pred_exec[i]
-                    in_system[e] += 1
-                    if events is not None:
-                        events.append((now, "arrival", i, e))
-                    if busy[e] < slots[e]:
-                        start(i, e, now)
-                    else:
-                        queues[e].append(i)
-                    continue
-                # degrade to the best whole placement
-                k = scheduler._select(list(d.t_pred))
-            if not has_space(k):
-                ranked = sorted(range(k_tiers), key=lambda j: d.t_pred[j])
-                dl = None if deadline_abs is None else float(deadline_abs[i])
-                if dl is None or not np.isfinite(dl):
-                    # PR-1 semantics: next-best tier with space, else force
-                    for j in ranked:
-                        if has_space(j):
-                            k = j
-                            break
-                    else:
-                        overflow[k] += 1  # everything full: force-enqueue
-                else:
-                    # deadline-aware: cheapest tier with space whose
-                    # predicted completion meets the deadline; else shed
-                    # (force-enqueue only if the preferred full tier is
-                    # still predicted to make it).
-                    spaced = [j for j in ranked if has_space(j)]
-                    feasible = [j for j in spaced
-                                if now + d.t_pred[j] <= dl]
-                    if feasible:
-                        k = feasible[0]
-                    elif not spaced and now + d.t_pred[k] <= dl:
-                        overflow[k] += 1
-                    else:
-                        shed_request(i, k, now, admitted=False)
-                        continue
-            tier_of[i] = k
-            pe = (scheduler.tiers[k].model.alpha_n * float(stream.n[i])
-                  + scheduler.tiers[k].model.alpha_m * float(m_hats[i])
-                  + scheduler.tiers[k].model.beta)
-            pred_exec[i] = max(pe, 0.0)
-            pred_backlog[k] += pred_exec[i]
-            in_system[k] += 1
+            dispatch(sq, now)
+        elif kind == _RETRY:
+            i = retry_req.pop((now, sq))
             if events is not None:
-                events.append((now, "arrival", i, k))
-            if busy[k] < slots[k]:
-                if batchers[k] is not None:
-                    start_batch([i], k, now)
-                else:
-                    start(i, k, now)
-            elif batchers[k] is not None:
-                batchers[k].add(i, length=int(stream.n[i]))
+                events.append((now, "retry", i, -1))
+            dispatch(i, now)
+        elif kind == _DOWN:
+            k = k_fin
+            down[k] = True
+            if events is not None:
+                events.append((now, "tier_down", -1, k))
+            # the crash fails everything in flight at the tier...
+            for key in sorted(outstanding[k]):
+                done = finish_req.pop(key, None)
+                if done is None:
+                    continue
+                busy[k] -= 1
+                for i in (done if isinstance(done, tuple) else (done,)):
+                    pred_backlog[k] = max(pred_backlog[k] - pred_exec[i],
+                                          0.0)
+                    in_system[k] -= 1
+                    fail_attempt(i, k, now, blackhole=False)
+            outstanding[k].clear()
+            # ...and everything still queued there dies with it
+            doomed: List[int] = []
+            if batchers[k] is not None:
+                while len(batchers[k]) > 0:
+                    ids, _ = batchers[k].next_batch_ids()
+                    doomed.extend(ids)
             else:
-                queues[k].append(i)
+                doomed = queues[k][qhead[k]:]
+                queues[k] = []
+                qhead[k] = 0
+            for i in doomed:
+                pred_backlog[k] = max(pred_backlog[k] - pred_exec[i], 0.0)
+                in_system[k] -= 1
+                fail_attempt(i, k, now, blackhole=False)
+        elif kind == _UP:
+            down[k_fin] = False   # half-open probing rediscovers the tier
+            if events is not None:
+                events.append((now, "tier_up", -1, k_fin))
         elif kind == _XARR:
             # encoder states reached the decode tier: queue the second leg
             i = xfer_req.pop((now, sq))
@@ -783,10 +1013,22 @@ def simulate_des(
             else:
                 queues[k].append(i)
         else:
-            done = finish_req.pop((now, sq))
+            done = finish_req.pop((now, sq), None)
+            if done is None:
+                continue   # voided: its tier crashed while it ran
             members = done if isinstance(done, tuple) else (done,)
             k = k_fin
             busy[k] -= 1
+            if ft:
+                outstanding[k].discard((now, sq))
+            if use_breakers and breakers[k].record_success():
+                # breaker recovery: the link estimators warmed during the
+                # episode describe a network that no longer exists
+                st = scheduler.tiers[k]
+                if st.tx is not None:
+                    st.tx.invalidate()
+                if getattr(scheduler, "links", None) is not None:
+                    scheduler.links.invalidate(k)
             for i in members:
                 if split_enabled and leg_of[i] == 1:
                     # encode leg done: ship the activations; completion
@@ -819,8 +1061,13 @@ def simulate_des(
                     # is timestamped `now`, when the response came back —
                     # timestamping it at arrival let out-of-order
                     # completions rewind the estimator's clock.
-                    scheduler.observe_rtt(k, now,
-                                          float(tiers[k].link.rtt_at(arr)))
+                    rtt_obs = float(tiers[k].link.rtt_at(arr))
+                    if ft:
+                        rf, _bf = faults.link_factors(k, float(t_start[i]))
+                        if rf != 1.0:
+                            rtt_obs *= rf   # degraded episode: the sample
+                            # the response really carried (§II-C)
+                    scheduler.observe_rtt(k, now, rtt_obs)
                 if split_enabled and leg_of[i] == 2:
                     # completed split: feed the inter-tier link estimator;
                     # leg samples are half-planes, so skip the calibrator
@@ -842,6 +1089,10 @@ def simulate_des(
     ok = ~shed & (tier_of >= 0)
     safe_tier = np.where(tier_of >= 0, tier_of, 0)
     tx_s = np.where(ok, np.stack(true_tx)[safe_tier, rows], 0.0)
+    if ft:
+        # requests served during a link-degradation episode paid the
+        # degraded transfer, not the trace baseline
+        tx_s = np.where(ok & ~np.isnan(tx_override), tx_override, tx_s)
     exec_s = np.where(ok, exec_used, 0.0)
     wait = np.where(ok, t_start - stream.t_arrival_s, 0.0)
     latency = np.where(ok, wait + exec_s + tx_s, np.nan)
@@ -855,6 +1106,25 @@ def simulate_des(
         latency = np.where(
             sm, (t_finish - stream.t_arrival_s) + up_v + down_v, latency)
         wait = np.where(sm, latency - exec_s - tx_s, wait)
+    fault_stats = None
+    if arm_extras:
+        served = int(ok.sum())
+        span = max(float(stream.t_arrival_s[-1]) if n_req else 0.0, 1e-9)
+        n_good = served
+        if stream.slo_s is not None:
+            slo = np.asarray(stream.slo_s, np.float64)
+            n_good = int((ok & (latency <= slo)).sum())
+        fault_stats = {
+            "availability": served / max(n_req, 1),
+            "fault_failures": float(fault_failures.sum()),
+            "retries": float(n_retries),
+            "replays": float(n_replays),
+            "fault_lost": float(fault_lost),
+            "failover_served": float(int((ok & (attempts > 1)).sum())),
+            "breaker_opens": (float(sum(b.n_opens for b in breakers))
+                              if use_breakers else 0.0),
+            "goodput_rps": n_good / span,
+        }
     return DESResult(
         policy=scheduler.name,
         tier_names=[t.name for t in tiers],
@@ -871,4 +1141,7 @@ def simulate_des(
         slo_s=None if stream.slo_s is None
         else np.asarray(stream.slo_s, np.float64),
         events=events,
+        attempts=attempts if arm_extras else None,
+        retry_after_s=retry_after_v if arm_extras else None,
+        fault_stats=fault_stats,
     )

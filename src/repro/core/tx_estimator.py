@@ -53,6 +53,7 @@ class TxEstimator:
         self.n_samples = 0
         self.n_probes = 0
         self.n_stale = 0
+        self.n_invalidations = 0
 
     # -- ingestion ---------------------------------------------------------
     def observe(self, timestamp_s: float, rtt_s: float) -> None:
@@ -76,6 +77,25 @@ class TxEstimator:
             self._estimate = (1 - self.alpha) * self._estimate + self.alpha * rtt_s
         self._last_update = timestamp_s
         self.n_samples += 1
+
+    def invalidate(self) -> None:
+        """Forget accumulated link state after a known discontinuity
+        (an outage episode ended, the route changed).
+
+        The ``n_stale`` causal guard protects against out-of-ORDER
+        samples; it cannot help when in-order *pre-outage* samples
+        poison the estimate for the recovered link — an EWMA warmed on a
+        congested route keeps predicting congestion long after failover
+        ends.  Invalidation keeps the current estimate as the best
+        available guess for queries, but resets the sample history so
+        the FIRST post-recovery observation replaces it wholesale (the
+        ``n_samples == 0`` bootstrap branch) instead of being blended at
+        weight ``alpha``.  Callers: circuit-breaker recovery
+        (OPEN→CLOSED) in the engine and the DES.
+        """
+        self._last_update = None
+        self.n_samples = 0
+        self.n_invalidations += 1
 
     # -- queries -----------------------------------------------------------
     def rtt(self, now_s: float, probe_fn=None) -> float:
@@ -184,3 +204,14 @@ class LinkModel:
         est = self._links.get((i, j))
         if est is not None:
             est.observe(now_s, rtt_s)
+
+    def invalidate(self, tier: int) -> int:
+        """Invalidate every registered link touching ``tier`` (either
+        direction) after its outage/recovery — see
+        :meth:`TxEstimator.invalidate`.  Returns how many links reset."""
+        n = 0
+        for (a, b), est in self._links.items():
+            if a == tier or b == tier:
+                est.invalidate()
+                n += 1
+        return n

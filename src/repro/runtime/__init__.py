@@ -3,7 +3,9 @@ C-NMT-routed tiered serving engine."""
 
 from repro.runtime.serving import (
     GenerationSession,
+    TierFaultError,
     make_batched_tier_executor,
+    make_faulty_executor,
     make_prefill_step,
     make_serve_step,
     make_tier_executor,
@@ -12,7 +14,9 @@ from repro.runtime.engine import CollaborativeEngine, Tier, RequestResult
 
 __all__ = [
     "GenerationSession",
+    "TierFaultError",
     "make_batched_tier_executor",
+    "make_faulty_executor",
     "make_prefill_step",
     "make_serve_step",
     "make_tier_executor",

@@ -82,6 +82,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.calibration import OnlineCalibrator
+from repro.core.faults import (
+    OPEN,
+    CircuitBreaker,
+    FaultSchedule,
+    RetryPolicy,
+    make_breakers,
+)
 from repro.data.pipeline import TokenBatcher
 from repro.core.latency_model import (
     ActivationCostModel,
@@ -270,6 +277,13 @@ class RequestResult:
     # split(e, d) when the plan-aware scheduler routed the request —
     # ``device`` stays the DECODE tier either way
     plan: Optional[PlacementPlan] = None
+    # fault-tolerance bookkeeping: dispatch attempts consumed (1 = clean
+    # first-try service), tiers that failed this request along the way,
+    # and — on shed responses — the backpressure hint telling the client
+    # when re-submitting is predicted to succeed (ROADMAP 5c)
+    attempts: int = 1
+    failed_tiers: tuple = ()
+    retry_after_s: Optional[float] = None
 
     @property
     def slo_met(self) -> Optional[bool]:
@@ -308,7 +322,10 @@ class CollaborativeEngine:
                  inter_rtt_fns: Optional[Dict] = None,
                  activation: Optional[ActivationCostModel] = None,
                  allow_split: bool = False,
-                 explore_eps: float = 0.0):
+                 explore_eps: float = 0.0,
+                 faults: Optional[FaultSchedule] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None):
         if tiers is None:
             if edge is None or cloud is None or rtt_fn is None:
                 raise ValueError("pass tiers=[...] or edge/cloud/rtt_fn")
@@ -357,6 +374,28 @@ class CollaborativeEngine:
         self._t0 = time.perf_counter()
         self._next_id = 0
 
+        # -- fault tolerance (ISSUE 8) ----------------------------------
+        # ``faults`` is injection ground truth the dispatcher never routes
+        # on; routing health comes from the per-tier breakers.  Arming
+        # either knob switches ``submit`` to the retry/failover dispatch
+        # loop; with an empty schedule that loop is pinned bit-for-bit
+        # identical to the plain path (tests enforce it).
+        self.faults = faults
+        self.retry = retry
+        self._ft = faults is not None or retry is not None \
+            or breaker is not None
+        self.breakers = make_breakers(len(self.tiers), breaker) \
+            if self._ft else None
+        # retry jitter draws from a dedicated stream so arming faults
+        # never perturbs ``self.rng``'s modelled-execution draws
+        self._fault_rng = np.random.default_rng(seed + 0x5EED) \
+            if self._ft else None
+        self.fault_failures = np.zeros(len(self.tiers), np.int64)
+        self.retry_count = 0        # re-dispatches after a failed attempt
+        self.failover_count = 0     # served requests that needed >1 attempt
+        self.fault_lost = 0         # shed because retries ran out / expired
+        self.decode_failovers = 0   # split decode legs re-homed mid-plan
+
     # convenience handles for the 2-tier configuration ---------------------
     @property
     def edge(self) -> Tier:
@@ -385,8 +424,22 @@ class CollaborativeEngine:
         ``deadline_s`` is a relative SLO: the deadline-aware admission
         path may shed the request (returned with ``shed=True`` and NaN
         latency) when no tier is predicted to meet it.
+
+        With fault tolerance armed (``faults``/``retry``/``breaker``)
+        dispatch goes through the bounded-retry failover loop: a failed
+        attempt trips the tier's circuit breaker, waits out the detection
+        timeout + backoff, and re-runs the placement decision with
+        unhealthy tiers excluded — the degradation ladder split →
+        whole-remote → edge-only → shed.
         """
         now = self._now() if now_s is None else now_s
+        if self._ft:
+            return self._submit_ft(tokens, now, deadline_s)
+        return self._submit_once(tokens, now, deadline_s)
+
+    def _submit_once(self, tokens: np.ndarray, now: float,
+                     deadline_s: Optional[float]) -> RequestResult:
+        """The fault-free dispatch path (pre-ISSUE-8 `submit` body)."""
         n = int(len(tokens))
         qd = [occ.queue_delay(now) for occ in self._occ]
         if self.scheduler._split_ready():
@@ -395,7 +448,8 @@ class CollaborativeEngine:
             d = self.scheduler.decide(n, now, qd)
         k = self._admit(d, now, deadline_s)
         if k < 0:                       # shed: never enters any queue
-            return self._shed(n, d, deadline_s)
+            return self._shed(n, d, deadline_s,
+                              retry_after_s=self._retry_after(now))
         if (d.plan is not None and d.plan.is_split
                 and k == d.plan.decode_tier
                 and self._has_space(d.plan.encode_tier, now)):
@@ -407,6 +461,162 @@ class CollaborativeEngine:
         return self._complete(k, d, n, m_out, exec_s, wait, service_s, now,
                               deadline_s)
 
+    # ---------------------------------------------- fault-tolerant submit --
+    def _injected_failure(self, k: int, t: float) -> Optional[str]:
+        """Injection check at dispatch: 'down' (crashed tier — connection
+        refused, fails fast), 'blackhole' (silent packet loss on the
+        client link — fails only after the full timeout), or None."""
+        if self.faults is None:
+            return None
+        if self.faults.tier_down(k, t):
+            return "down"
+        if self.tiers[k].rtt_fn is not None \
+                and self.faults.link_blackhole(k, t):
+            return "blackhole"
+        return None
+
+    def _record_failure(self, k: int, t: float) -> None:
+        self.fault_failures[k] += 1
+        self.breakers[k].record_failure(t)
+
+    def _record_success(self, k: int) -> None:
+        """Successful completion on tier k; on breaker recovery
+        (OPEN/HALF_OPEN → CLOSED) the tier's link state is stale by
+        construction — an estimate warmed before/through the outage —
+        so it is invalidated wholesale (satellite: TxEstimator reset)."""
+        if not self.breakers[k].record_success():
+            return
+        st = self.scheduler.tiers[k]
+        if st.tx is not None:
+            st.tx.invalidate()
+        if self.scheduler.links is not None:
+            self.scheduler.links.invalidate(k)
+
+    def _retry_after(self, now: float) -> float:
+        """Backpressure hint for shed responses (ROADMAP 5c): predicted
+        seconds until SOME tier could accept work — the best over tiers
+        of queue drain, plus the breaker's probe cool-down when open."""
+        best = math.inf
+        for k, occ in enumerate(self._occ):
+            t = occ.queue_delay(now)
+            if self.breakers is not None and self.breakers[k].state == OPEN:
+                t = max(t, self.breakers[k].time_to_probe(now))
+            best = min(best, t)
+        return best if math.isfinite(best) else 0.0
+
+    def _submit_ft(self, tokens: np.ndarray, now: float,
+                   deadline_s: Optional[float]) -> RequestResult:
+        """Bounded-retry failover dispatch (tentpole).
+
+        Per attempt: mask = this request's already-failed tiers ∪ tiers
+        whose breaker refuses dispatch; re-run the placement decision
+        excluding the mask; on an injected (or real executor) failure,
+        trip the breaker, advance the virtual clock by the detection
+        time + exponential backoff with jitter, and go again.  The
+        request is shed when every tier is masked (with a
+        ``retry_after_s`` hint), when the retry budget runs out, or when
+        its deadline expires mid-retry."""
+        n = int(len(tokens))
+        now0 = now
+        t = now
+        budget = 0 if self.retry is None else self.retry.max_retries
+        failed: list = []           # order preserved for the result record
+        attempts = 0
+        while True:
+            attempts += 1
+            mask = set(failed)
+            mask.update(k for k in range(len(self.tiers))
+                        if not self.breakers[k].allow(t))
+            if len(mask) >= len(self.tiers):
+                # every tier dark: shed with the backpressure hint
+                self.fault_lost += 1
+                d = MultiTierDecision(0, tuple([math.inf] * len(self.tiers)),
+                                      self.scheduler.m_hat(n))
+                return self._shed(n, d, deadline_s,
+                                  retry_after_s=self._retry_after(t),
+                                  attempts=attempts,
+                                  failed_tiers=tuple(failed))
+            exclude = frozenset(mask) if mask else None
+            qd = [occ.queue_delay(t) for occ in self._occ]
+            if self.scheduler._split_ready():
+                d = self.scheduler.decide_plan(n, t, qd, exclude=exclude)
+            else:
+                d = self.scheduler.decide(n, t, qd, exclude=exclude)
+            rem_dl = None if deadline_s is None \
+                else deadline_s - (t - now0)
+            if rem_dl is not None and rem_dl <= 0.0:
+                self.fault_lost += 1
+                return self._shed(n, d, deadline_s,
+                                  retry_after_s=self._retry_after(t),
+                                  attempts=attempts,
+                                  failed_tiers=tuple(failed))
+            allowed = (lambda j, m=frozenset(mask): j not in m) \
+                if mask else None
+            k = self._admit(d, t, rem_dl, allowed=allowed)
+            if k < 0:               # admission shed (queues, not faults)
+                return self._shed(n, d, deadline_s,
+                                  retry_after_s=self._retry_after(t),
+                                  attempts=attempts,
+                                  failed_tiers=tuple(failed))
+            if (d.plan is not None and d.plan.is_split
+                    and k == d.plan.decode_tier
+                    and self._injected_failure(d.plan.encode_tier, t) is None
+                    and self._has_space(d.plan.encode_tier, t)):
+                res = self._submit_split(np.asarray(tokens, np.int32), d, t,
+                                         deadline_s)
+                # res.device is the tier that actually decoded — the
+                # planned one, or the failover target when it died mid-plan
+                return self._finish_ft(res, res.device, t, now0, attempts,
+                                       failed)
+            tier = self.tiers[k]
+            fail = self._injected_failure(k, t)
+            m_out = exec_s = None
+            if fail is None:
+                try:
+                    m_out, exec_s = tier.run(tokens, d.m_hat, self.rng)
+                except Exception:
+                    fail = "down"   # a real executor raising = crashed
+            if fail is not None:
+                self._record_failure(k, t)
+                failed.append(k)
+                detect = RetryPolicy().detect_s(fail == "blackhole") \
+                    if self.retry is None \
+                    else self.retry.detect_s(fail == "blackhole")
+                if attempts > budget:
+                    self.fault_lost += 1
+                    return self._shed(n, d, deadline_s,
+                                      retry_after_s=self._retry_after(
+                                          t + detect),
+                                      attempts=attempts,
+                                      failed_tiers=tuple(failed))
+                t = t + detect + self.retry.backoff(attempts - 1,
+                                                    self._fault_rng)
+                self.retry_count += 1
+                continue
+            if self.faults is not None:
+                s = self.faults.slowdown(k, t)
+                if s != 1.0:        # straggler window: degraded, not failed
+                    exec_s *= s
+            wait, service_s = self._occ[k].assign(t, exec_s)
+            res = self._complete(k, d, n, m_out, exec_s, wait, service_s, t,
+                                 deadline_s)
+            return self._finish_ft(res, k, t, now0, attempts, failed)
+
+    def _finish_ft(self, res: RequestResult, k: int, t: float, now0: float,
+                   attempts: int, failed: list) -> RequestResult:
+        """Shared success tail of the failover loop: breaker/link-state
+        bookkeeping plus folding the retry delays into the latency."""
+        self._record_success(k)
+        # combine with what _submit_split already recorded (a decode-leg
+        # failover inside the plan counts as its own extra attempt)
+        res.attempts += attempts - 1
+        res.failed_tiers = tuple(failed) + res.failed_tiers
+        if t != now0:               # detection + backoff time is real
+            res.latency_s += t - now0
+        if res.attempts > 1:
+            self.failover_count += 1
+        return res
+
     # -------------------------------------------------------- split plans --
     def _ship_time(self, e: int, k: int, now: float,
                    payload_bytes: float) -> float:
@@ -416,9 +626,17 @@ class CollaborativeEngine:
         est = self.scheduler.links.link(e, k)
         if fn is not None:
             rtt = float(fn(now))
+            bw = est.bandwidth_bps if est is not None else 100e6
+            if self.faults is not None:
+                # an inter-tier hop degrades when EITHER endpoint's link
+                # is in an episode; overlapping episodes compound
+                for end in (e, k):
+                    rf, bf = self.faults.link_factors(end, now)
+                    if rf != 1.0 or bf != 1.0:
+                        rtt *= rf
+                        bw *= bf
             if est is not None:
                 self.scheduler.links.observe(e, k, now, rtt)
-            bw = est.bandwidth_bps if est is not None else 100e6
             return rtt / 2.0 + payload_bytes * 8.0 / bw
         # no truth process: the estimate is the model (multi-hop included)
         return self.scheduler.links.tx_time(e, k, now, payload_bytes,
@@ -431,11 +649,17 @@ class CollaborativeEngine:
         if tier.rtt_fn is None:
             return 0.0
         rtt = float(tier.rtt_fn(now))
+        bw = tier.bandwidth_bps
+        if self.faults is not None:
+            rf, bf = self.faults.link_factors(k, now)
+            if rf != 1.0 or bf != 1.0:
+                rtt *= rf
+                bw *= bf
         tx = self.scheduler.tiers[k].tx
         if tx is not None:
             tx.observe(now, rtt)
         payload = float(bytes_for_tokens(tokens, self.scheduler.bytes_per_token))
-        return rtt / 2.0 + payload * 8.0 / tier.bandwidth_bps
+        return rtt / 2.0 + payload * 8.0 / bw
 
     def _submit_split(self, tokens: np.ndarray, d: MultiTierDecision,
                       now: float, deadline_s: Optional[float]
@@ -451,38 +675,87 @@ class CollaborativeEngine:
         scheduler's ActivationCostModel."""
         plan = d.plan
         e, k = plan.encode_tier, plan.decode_tier
-        enc_tier, dec_tier = self.tiers[e], self.tiers[k]
+        enc_tier = self.tiers[e]
         n = int(len(tokens))
         real = (enc_tier.encode_executor is not None
-                and dec_tier.decode_executor is not None)
+                and self.tiers[k].decode_executor is not None)
         if real:
             t0 = time.perf_counter()
             states = enc_tier.encode_executor(tokens)
             t_enc = time.perf_counter() - t0
             payload = float(states.payload_bytes())
-            t0 = time.perf_counter()
-            m_out, _ = dec_tier.decode_executor(states)
-            t_dec = time.perf_counter() - t0
-            m_out = int(m_out)
         else:
+            states = None
             t_enc = float(enc_tier.profile.true_leg_times(
                 float(n), d.m_hat, self.rng)[0])
-            t_dec = float(dec_tier.profile.true_leg_times(
-                float(n), d.m_hat, self.rng)[1])
             payload = float(self.scheduler.activation.payload_bytes(n))
-            m_out = int(max(round(d.m_hat), 1))
+        if self.faults is not None:
+            s = self.faults.slowdown(e, now)
+            if s != 1.0:
+                t_enc *= s
 
         up = self._client_leg(e, now, n)
         wait_e, svc_e = self._occ[e].assign(now, t_enc)
         ship = self._ship_time(e, k, now, payload)
         dec_arrival = now + up + wait_e + svc_e + ship
-        wait_d, svc_d = self._occ[k].assign(dec_arrival, t_dec)
-        down = self._client_leg(k, now, m_out)
-        latency = up + wait_e + svc_e + ship + wait_d + svc_d + down
 
-        res = RequestResult(self._next_id, k, n, m_out, latency, d,
+        # decode-leg failover (tentpole): the planned decode tier died
+        # while the encoder states were in flight.  The states survive at
+        # the ENCODE tier, so recovery re-ships them to a healthy decode
+        # target (possibly tier e itself — decode-local) instead of
+        # re-running the whole request from the prompt.
+        k_exec, dec_dispatch, extra, failed_dec = k, dec_arrival, 0.0, ()
+        if self._ft:
+            fail = self._injected_failure(k, dec_arrival)
+            if fail is not None:
+                self._record_failure(k, dec_arrival)
+                pol = self.retry if self.retry is not None else RetryPolicy()
+                detect = pol.detect_s(fail == "blackhole")
+                k2 = -1 if self.retry is None else \
+                    self._decode_failover_target(e, k, dec_arrival + detect,
+                                                 real, d.m_hat, payload)
+                if k2 < 0:          # no retries, or nowhere healthy left
+                    self.fault_lost += 1
+                    return self._shed(
+                        n, d, deadline_s,
+                        retry_after_s=self._retry_after(dec_arrival + detect),
+                        attempts=2, failed_tiers=(k,))
+                backoff = pol.backoff(0, self._fault_rng)
+                t2 = dec_arrival + detect + backoff
+                reship = 0.0 if k2 == e else \
+                    self._ship_time(e, k2, t2, payload)
+                k_exec, dec_dispatch = k2, t2 + reship
+                extra = detect + backoff + reship
+                failed_dec = (k,)
+                self.decode_failovers += 1
+                self.retry_count += 1
+
+        dec_tier = self.tiers[k_exec]
+        if real and dec_tier.decode_executor is not None:
+            t0 = time.perf_counter()
+            m_out, _ = dec_tier.decode_executor(states)
+            t_dec = time.perf_counter() - t0
+            m_out = int(m_out)
+        else:
+            t_dec = float(dec_tier.profile.true_leg_times(
+                float(n), d.m_hat, self.rng)[1])
+            m_out = int(max(round(d.m_hat), 1))
+        if self.faults is not None:
+            s = self.faults.slowdown(k_exec, dec_dispatch)
+            if s != 1.0:
+                t_dec *= s
+
+        wait_d, svc_d = self._occ[k_exec].assign(dec_dispatch, t_dec)
+        down = self._client_leg(k_exec, now, m_out)
+        latency = up + wait_e + svc_e + ship + extra + wait_d + svc_d + down
+
+        res = RequestResult(self._next_id, k_exec, n, m_out, latency, d,
                             wait_s=wait_e + wait_d, tier_name=dec_tier.name,
-                            deadline_s=deadline_s, plan=plan)
+                            deadline_s=deadline_s,
+                            plan=(plan if k_exec == k
+                                  else PlacementPlan.split(e, k_exec)),
+                            attempts=2 if failed_dec else 1,
+                            failed_tiers=failed_dec)
         self._next_id += 1
         self.results.append(res)
         self.split_count += 1
@@ -490,10 +763,43 @@ class CollaborativeEngine:
         # (alpha_n-only / alpha_m-only) and would corrupt the full fit
         return res
 
+    def _decode_failover_target(self, e: int, k_failed: int, t: float,
+                                need_real: bool, m_hat: float,
+                                payload: float) -> int:
+        """Cheapest healthy tier to re-home a split plan's decode leg on:
+        predicted queue drain + states re-ship + decode-leg cost.  With
+        REAL split executors only decode-capable tiers can consume the
+        shipped states, so those are preferred; -1 when nothing healthy
+        remains (caller sheds)."""
+        cands = [j for j in range(len(self.tiers))
+                 if j != k_failed and self.breakers[j].allow(t)
+                 and self._injected_failure(j, t) is None]
+        if not cands:
+            return -1
+        if need_real:
+            real_c = [j for j in cands
+                      if self.tiers[j].decode_executor is not None]
+            if real_c:
+                cands = real_c
+
+        def cost(j: int) -> float:
+            st = self.scheduler.tiers[j]
+            t_dec = st.model.alpha_m * m_hat + 0.5 * st.model.beta
+            ship = 0.0 if j == e else self.scheduler.links.tx_time(
+                e, j, t, payload, one_way=True)
+            return self._occ[j].queue_delay(t) + ship + t_dec
+
+        return min(cands, key=cost)
+
     def _shed(self, n: int, d: MultiTierDecision,
-              deadline_s: Optional[float]) -> RequestResult:
+              deadline_s: Optional[float], *,
+              retry_after_s: Optional[float] = None,
+              attempts: int = 1,
+              failed_tiers: tuple = ()) -> RequestResult:
         res = RequestResult(self._next_id, -1, n, 0, float("nan"), d,
-                            deadline_s=deadline_s, shed=True)
+                            deadline_s=deadline_s, shed=True,
+                            attempts=attempts, failed_tiers=failed_tiers,
+                            retry_after_s=retry_after_s)
         self._next_id += 1
         self.results.append(res)
         return res
@@ -512,7 +818,16 @@ class CollaborativeEngine:
             payload = float(bytes_for_tokens(
                 n + m_out, self.scheduler.bytes_per_token))
             tx = self.scheduler.tiers[k].tx
-            net = service_s + rtt + payload * 8.0 / tx.bandwidth_bps
+            bw = tx.bandwidth_bps
+            if self.faults is not None:
+                # degradation episode on the client link: the TRUE rtt
+                # spikes / bandwidth collapses; the estimator observes
+                # the degraded value — that is what measurement sees
+                rf, bf = self.faults.link_factors(k, now)
+                if rf != 1.0 or bf != 1.0:
+                    rtt *= rf
+                    bw *= bf
+            net = service_s + rtt + payload * 8.0 / bw
             # §II-C timestamp mechanism, per link.  Stamped with the
             # submit clock (monotone across calls): this synchronous
             # engine ingests the sample when it resolves the request, and
@@ -566,6 +881,12 @@ class CollaborativeEngine:
         measured latency, not in their admission test.
         """
         now = self._now() if now_s is None else now_s
+        if self._ft:
+            # fault-tolerant batch serving degenerates to per-request
+            # failover dispatch: a member's failure/retry timeline is
+            # per-request state a shared batched generate cannot carry
+            return [self._submit_ft(np.asarray(t, np.int32), now,
+                                    deadline_s) for t in requests]
         results: List[Optional[RequestResult]] = [None] * len(requests)
         groups: Dict[int, List[tuple]] = {}
         pending = [0] * len(self.tiers)
@@ -772,7 +1093,8 @@ class CollaborativeEngine:
     def _admit(self, d: MultiTierDecision, now: float,
                deadline_s: Optional[float] = None,
                pending: Optional[List[int]] = None,
-               has_space: Optional[Callable[[int], bool]] = None) -> int:
+               has_space: Optional[Callable[[int], bool]] = None,
+               allowed: Optional[Callable[[int], bool]] = None) -> int:
         """Bounded-FIFO admission: re-route from a full tier to the
         next-best tier with space; if everything is full, keep the choice
         and count the rejection.  Deadline-carrying requests re-route
@@ -789,6 +1111,11 @@ class CollaborativeEngine:
         continuous tiers while keeping this exact shed/reroute rule."""
         space = has_space if has_space is not None else \
             (lambda j: self._has_space(j, now, pending))
+        if allowed is not None:
+            # fault-tolerant dispatch: a masked (unhealthy) tier is never
+            # a re-route target, not even as deadline-less force-enqueue
+            base = space
+            space = lambda j: allowed(j) and base(j)   # noqa: E731
         k = d.tier
         if space(k):
             return k
@@ -839,14 +1166,17 @@ class CollaborativeEngine:
         slo = 1.0 if not with_dl else \
             float(sum(bool(r.slo_met) for r in with_dl)) / len(with_dl)
         if not served:
-            return {"requests": len(self.results), "shed": n_shed,
-                    "slo_attainment": slo}
+            out = {"requests": len(self.results), "shed": n_shed,
+                   "slo_attainment": slo}
+            if self._ft:
+                out.update(self._fault_stats(0))
+            return out
         lat = np.array([r.latency_s for r in served])
         wait = np.array([r.wait_s for r in served])
         dev = np.array([r.device for r in served])
         remote = np.array([t.rtt_fn is not None for t in self.tiers])
         tx = self.tx
-        return {
+        out = {
             "requests": len(self.results),
             "total_latency_s": float(lat.sum()),
             "mean_latency_s": float(lat.mean()),
@@ -861,4 +1191,24 @@ class CollaborativeEngine:
             "slo_attainment": slo,
             "split": self.split_count,
             "tx_estimate_s": 0.0 if tx is None else tx.rtt(0.0),
+        }
+        if self._ft:
+            out.update(self._fault_stats(len(served)))
+        return out
+
+    def _fault_stats(self, n_served: int) -> Dict[str, object]:
+        """Fault-tolerance observability (only reported when armed)."""
+        return {
+            "availability": (n_served / len(self.results)
+                             if self.results else 1.0),
+            "fault_failures": int(self.fault_failures.sum()),
+            "retries": self.retry_count,
+            "failovers": self.failover_count,
+            "decode_failovers": self.decode_failovers,
+            "fault_lost": self.fault_lost,
+            "breaker_opens": sum(b.n_opens for b in self.breakers),
+            "breaker_probes": sum(b.n_probes for b in self.breakers),
+            "mean_attempts": (float(np.mean([r.attempts
+                                             for r in self.results]))
+                              if self.results else 1.0),
         }

@@ -127,6 +127,50 @@ def make_tier_executor(session: "GenerationSession", *, max_new: int = 16,
     return executor
 
 
+class TierFaultError(RuntimeError):
+    """A tier executor crashed (or was made to crash by injection).
+
+    The :class:`~repro.runtime.engine.CollaborativeEngine` failover loop
+    treats ANY exception escaping ``Tier.run`` as a tier-down signal —
+    this named type exists so fault-injection wrappers and tests can
+    raise/catch something more specific than ``RuntimeError``.
+    """
+
+
+def make_faulty_executor(executor: Callable, should_fail,
+                         *, message: str = "injected tier fault") -> Callable:
+    """Wrap a REAL tier executor with deterministic fault injection.
+
+    ``should_fail`` decides per call whether this invocation crashes:
+    either a ``Callable[[int], bool]`` of the 0-based call index, or a
+    collection of call indices.  A failing call raises
+    :class:`TierFaultError` *instead of* executing — modelling a crash
+    before useful work, which is what the engine's detection/retry
+    arithmetic assumes.  The wrapper exposes ``.calls`` (``{"n": total,
+    "faults": raised}``) so tests can assert the injection actually
+    fired.  This is the REAL-execution twin of the modelled
+    :class:`~repro.core.faults.FaultSchedule` injection: the schedule
+    drives virtual-time faults inside the engine/DES, this wrapper
+    drives them through the executor boundary the engine cannot see
+    into.
+    """
+    if not callable(should_fail):
+        wanted = frozenset(int(i) for i in should_fail)
+        should_fail = wanted.__contains__
+    calls = {"n": 0, "faults": 0}
+
+    def faulty(tokens: np.ndarray):
+        i = calls["n"]
+        calls["n"] += 1
+        if should_fail(i):
+            calls["faults"] += 1
+            raise TierFaultError(f"{message} (call {i})")
+        return executor(tokens)
+
+    faulty.calls = calls
+    return faulty
+
+
 def make_batched_tier_executor(session: "GenerationSession", *,
                                max_new: int = 16,
                                vocab_clip: Optional[int] = None) -> Callable:

@@ -25,6 +25,7 @@ def test_every_example_is_covered():
         "big_model_serving.py",
         "collaborative_serving.py",
         "continuous_serving.py",
+        "fault_tolerant_serving.py",
         "multitier_serving.py",
         "partitioned_serving.py",
         "quickstart.py",

@@ -1,0 +1,454 @@
+"""MLPerf-style load-generation harness for the collaborative engine.
+
+The paper's headline claim (up to 44% latency reduction from
+collaborative placement) is only meaningful under realistic arrival
+processes and mixed workloads.  This harness drives the REAL
+:class:`~repro.runtime.engine.CollaborativeEngine` — its actual
+routing, deadline-aware admission and virtual-time occupancy code, with
+modelled tier execution so runs are fast and deterministic — under the
+four arrival processes of an MLPerf-loadgen-shaped benchmark, with a
+clean QSL/SUT split:
+
+* :class:`QuerySampleLibrary` (QSL) owns the query *samples*: input and
+  output lengths drawn from a :class:`WorkloadMix` — weighted length
+  buckets over one language pair plus a per-mix SLO.  Two mixes ship by
+  default: short chat-like ``de-en`` requests under a tight SLO and
+  long ``en-zh`` document translations under a loose one.
+* :class:`EngineSUT` (SUT) wraps the engine behind ``issue()`` and
+  records per-request outcomes through the engine's ``on_complete``
+  completion callback and per-request ``tag`` (the hooks this harness
+  motivated).
+
+Scenarios (MLPerf analogue in parentheses):
+
+* ``poisson`` (Server)       — open-loop constant-rate Poisson;
+* ``closed``  (SingleStream, generalized to C clients) — fixed
+  concurrency, each client issuing its next query the moment its
+  previous one completes (+ think time): the issue process is *derived*
+  from completions, not generated;
+* ``bursty``                 — open-loop nonhomogeneous Poisson with a
+  diurnal raised-cosine rate modulation (thinning sampler);
+* ``trace``  (replay)        — arrival instants read verbatim from a
+  trace FILE (synthesized steady+burst here, recorded in deployment);
+  the run asserts the issued times match the file bit-for-bit.
+
+Every scenario's issue times — including the *realized* times of the
+closed-loop run — are replayed through the DES twin
+(:func:`~repro.core.simulator.make_trace_stream` + ``simulate_des`` on
+a matched 3-tier setup), so modelled-vs-real drift is part of the
+scoreboard, per scenario, in the emitted JSON.
+
+Reports per scenario x mix: p50/p90/p95/p99 latency, SLO attainment,
+throughput (requests/s and tokens/s), shed/rejected/retry counts, and
+the DES-twin drift.  Emits ``BENCH_loadgen.json`` (``--json``) for the
+CI bench trail — the standing scoreboard every later scaling PR must
+move.
+
+Run: PYTHONPATH=src python benchmarks/loadgen.py [--smoke]
+     [--json BENCH_loadgen.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import heapq
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.arrivals import (
+    bursty_arrivals,
+    load_trace,
+    poisson_arrivals,
+    save_trace,
+)
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel
+from repro.core.length_regressor import LinearN2M
+from repro.core.profiles import make_profile
+from repro.core.scheduler import MultiTierScheduler, SchedTier
+from repro.core.simulator import SimTier, make_trace_stream, simulate_des
+from repro.core.tx_estimator import TxEstimator
+from repro.data.synthetic import LANGUAGE_PAIRS
+from repro.runtime.engine import CollaborativeEngine, Tier
+
+_SEED = 29
+SCENARIOS = ("poisson", "closed", "bursty", "trace")
+
+
+# ------------------------------------------------------------------ QSL --
+@dataclasses.dataclass(frozen=True)
+class WorkloadMix:
+    """One workload class: a language pair, weighted token-length
+    buckets ``(lo, hi, weight)`` for the input length N, and the
+    relative SLO (seconds) every request of this mix carries."""
+
+    name: str
+    pair: str
+    buckets: Tuple[Tuple[int, int, float], ...]
+    slo_s: float
+
+
+MIXES: Dict[str, WorkloadMix] = {
+    # short chat-like turns, tight deadline (interactive translation)
+    "chat": WorkloadMix("chat", "de-en", ((2, 16, 0.7), (16, 40, 0.3)), 0.6),
+    # long document translations, loose deadline (batch-ish offline work)
+    "doc": WorkloadMix("doc", "en-zh", ((40, 120, 0.6), (120, 200, 0.4)),
+                       3.0),
+}
+
+
+class QuerySampleLibrary:
+    """QSL half of the MLPerf split: owns ``size`` query samples drawn
+    from a :class:`WorkloadMix` — input lengths from the weighted
+    buckets, output lengths from the pair's verbosity line
+    ``gamma*N + delta`` plus its heteroscedastic noise (the Fig. 3
+    statistics).  Deterministic given ``seed``; ``query(i)`` returns the
+    token ids of sample ``i`` (values are irrelevant to latency)."""
+
+    def __init__(self, mix: WorkloadMix, size: int, *, seed: int = _SEED):
+        self.mix = mix
+        lp = LANGUAGE_PAIRS[mix.pair]
+        rng = np.random.default_rng(seed)
+        w = np.asarray([b[2] for b in mix.buckets], np.float64)
+        pick = rng.choice(len(mix.buckets), size=size, p=w / w.sum())
+        lo = np.asarray([b[0] for b in mix.buckets], np.float64)[pick]
+        hi = np.asarray([b[1] for b in mix.buckets], np.float64)[pick]
+        self.n = np.round(lo + rng.random(size) * (hi - lo)).astype(np.int64)
+        noise = lp.noise_base + lp.noise_slope * self.n
+        m = lp.gamma * self.n + lp.delta + rng.standard_normal(size) * noise
+        self.m_out = np.clip(np.round(m), 1, lp.max_len)
+
+    def __len__(self) -> int:
+        return int(self.n.size)
+
+    def query(self, i: int) -> np.ndarray:
+        return np.zeros(int(self.n[i]), np.int32)
+
+
+# ------------------------------------------------------------------ SUT --
+def _profiles(seed: int = 5):
+    """The 3-tier npu/edge/cloud shape shared with the multitier and
+    fault benchmarks: local npu, edge over a LAN trace, cloud over a
+    WAN trace."""
+    npu = DeviceProfile("npu", LinearLatencyModel(4e-4, 1.6e-3, 0.004), 0.05)
+    edge = DeviceProfile("edge", LinearLatencyModel(1.5e-4, 6e-4, 0.008),
+                         0.05)
+    cloud = DeviceProfile("cloud", LinearLatencyModel(2e-5, 9e-5, 0.002),
+                          0.08)
+    lan, wan = make_profile("cp2", seed=seed), make_profile("cp1", seed=seed)
+    return npu, edge, cloud, lan, wan
+
+
+def _make_engine(mix: WorkloadMix, *, seed: int = _SEED) -> CollaborativeEngine:
+    npu, edge, cloud, lan, wan = _profiles()
+    lp = LANGUAGE_PAIRS[mix.pair]
+    tiers = [
+        Tier(npu, servers=1, queue_capacity=16),
+        Tier(edge, servers=2, queue_capacity=64, rtt_fn=lan.rtt_at,
+             bandwidth_bps=lan.bandwidth_bps),
+        Tier(cloud, servers=8, rtt_fn=wan.rtt_at,
+             bandwidth_bps=wan.bandwidth_bps),
+    ]
+    return CollaborativeEngine(n2m=LinearN2M(lp.gamma, lp.delta),
+                               tiers=tiers, seed=seed)
+
+
+def _des_setup(mix: WorkloadMix):
+    """DES twin of :func:`_make_engine`: same planes, links, capacities
+    and N->M regressor, expressed as SimTiers + MultiTierScheduler."""
+    npu, edge, cloud, lan, wan = _profiles()
+    lp = LANGUAGE_PAIRS[mix.pair]
+    tiers = [SimTier("npu", npu, servers=1, queue_capacity=16),
+             SimTier("edge", edge, servers=2, queue_capacity=64, link=lan),
+             SimTier("cloud", cloud, servers=8, link=wan)]
+    sched = MultiTierScheduler(
+        [SchedTier("npu", dataclasses.replace(npu.model), None),
+         SchedTier("edge", dataclasses.replace(edge.model),
+                   TxEstimator(init_rtt_s=float(lan.rtt_at(0.0)),
+                               bandwidth_bps=lan.bandwidth_bps)),
+         SchedTier("cloud", dataclasses.replace(cloud.model),
+                   TxEstimator(init_rtt_s=float(wan.rtt_at(0.0)),
+                               bandwidth_bps=wan.bandwidth_bps))],
+        LinearN2M(lp.gamma, lp.delta))
+    return sched, tiers
+
+
+class EngineSUT:
+    """SUT half of the MLPerf split: the real CollaborativeEngine behind
+    ``issue()``.  Per-request outcomes are recorded through the engine's
+    ``on_complete`` completion callback (never by scraping
+    ``engine.results``), each record carrying the issue/finish instants
+    the closed-loop driver and the concurrency-invariant test need."""
+
+    def __init__(self, mix: WorkloadMix, *, seed: int = _SEED):
+        self.engine = _make_engine(mix, seed=seed)
+        self.records: List[dict] = []
+        self._issue_s = 0.0
+        self.engine.on_complete = self._on_complete
+
+    def _on_complete(self, res) -> None:
+        t = self._issue_s
+        self.records.append({
+            "tag": res.tag,
+            "issue_s": t,
+            "finish_s": float("nan") if res.shed else t + res.latency_s,
+            "latency_s": res.latency_s,
+            "shed": bool(res.shed),
+            "slo_met": res.slo_met,
+            "n": int(res.n),
+            "m_out": int(res.m_out),
+            "tier": res.tier_name,
+            "retry_after_s": res.retry_after_s,
+        })
+
+    def issue(self, t: float, tokens: np.ndarray,
+              deadline_s: Optional[float], tag: str):
+        self._issue_s = float(t)
+        return self.engine.submit(tokens, now_s=float(t),
+                                  deadline_s=deadline_s, tag=tag)
+
+
+# ------------------------------------------------------------ scenarios --
+def run_open_loop(sut: EngineSUT, qsl: QuerySampleLibrary,
+                  arrivals: np.ndarray, *, tag: str) -> np.ndarray:
+    """Open-loop driver shared by poisson/bursty/trace: issue sample i
+    at ``arrivals[i]`` (virtual seconds) regardless of completions."""
+    slo = qsl.mix.slo_s
+    for i, t in enumerate(arrivals):
+        sut.issue(float(t), qsl.query(i), slo, tag)
+    return np.asarray(arrivals, np.float64)
+
+
+def run_closed_loop(sut: EngineSUT, qsl: QuerySampleLibrary, *,
+                    concurrency: int, think_s: float = 0.01,
+                    tag: str) -> np.ndarray:
+    """Fixed-concurrency closed loop: ``concurrency`` clients, each
+    issuing its next query at its previous completion + ``think_s`` (a
+    shed response waits out its ``retry_after_s`` backpressure hint
+    first).  At most ``concurrency`` requests are ever in flight — the
+    invariant the tests pin.  Returns the realized issue times (the
+    trace the DES twin replays)."""
+    slo = qsl.mix.slo_s
+    # microsecond stagger so client start order is well-defined
+    heap = [(c * 1e-6, c) for c in range(concurrency)]
+    heapq.heapify(heap)
+    issued = np.empty(len(qsl), np.float64)
+    for i in range(len(qsl)):
+        t, c = heapq.heappop(heap)
+        res = sut.issue(t, qsl.query(i), slo, tag)
+        issued[i] = t
+        if res.shed:
+            nxt = t + think_s + float(res.retry_after_s or 0.0)
+        else:
+            nxt = t + float(res.latency_s) + think_s
+        heapq.heappush(heap, (nxt, c))
+    return issued
+
+
+def _trace_arrivals(size: int, rate_hz: float,
+                    path: Optional[str]) -> Tuple[np.ndarray, str, bool]:
+    """Synthesize a "recorded" trace — a steady phase followed by a 3x
+    burst — persist it, and load it back: the replay consumes the FILE,
+    so the save/load round-trip is part of the scenario.  Returns
+    (arrivals, path, owns_path)."""
+    half = size // 2
+    a = poisson_arrivals(rate_hz, half, seed=_SEED + 17)
+    t0 = float(a[-1]) if half else 0.0
+    b = poisson_arrivals(3.0 * rate_hz, size - half, seed=_SEED + 18, t0=t0)
+    arr = np.concatenate([a, b])
+    own = path is None
+    if own:
+        fd, path = tempfile.mkstemp(suffix=".json", prefix="loadgen_trace_")
+        os.close(fd)
+    save_trace(path, arr, meta={"rate_hz": rate_hz, "burst_factor": 3.0})
+    return load_trace(path), path, own
+
+
+# ------------------------------------------------------------ reporting --
+def max_in_flight(records: Sequence[dict]) -> int:
+    """Peak number of simultaneously in-flight served requests (a
+    request is in flight on [issue_s, finish_s); shed requests never
+    occupy the system).  The closed-loop invariant: <= concurrency."""
+    ev: List[Tuple[float, int]] = []
+    for r in records:
+        if r["shed"]:
+            continue
+        ev.append((r["issue_s"], 1))
+        ev.append((r["finish_s"], -1))
+    ev.sort(key=lambda e: (e[0], e[1]))   # finish before issue at ties
+    peak = cur = 0
+    for _, d in ev:
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+def _summarize(records: Sequence[dict],
+               engine: CollaborativeEngine) -> Dict[str, float]:
+    """Per-scenario scoreboard row from the SUT's completion records."""
+    served = [r for r in records if not r["shed"]]
+    with_dl = [r for r in records if r["slo_met"] is not None]
+    out: Dict[str, float] = {
+        "requests": float(len(records)),
+        "served": float(len(served)),
+        "shed": float(len(records) - len(served)),
+        "rejected": float(engine.rejected.sum()),
+        "retries": float(engine.retry_count),
+        "slo_attainment": (sum(bool(r["slo_met"]) for r in with_dl)
+                           / len(with_dl)) if with_dl else 1.0,
+    }
+    if not served:
+        for k in ("mean_latency_s", "p50_latency_s", "p90_latency_s",
+                  "p95_latency_s", "p99_latency_s", "throughput_rps",
+                  "tokens_per_s"):
+            out[k] = float("nan")
+        return out
+    lat = np.array([r["latency_s"] for r in served])
+    fin = np.array([r["finish_s"] for r in served])
+    span = max(float(fin.max()) - min(r["issue_s"] for r in records), 1e-9)
+    out.update({
+        "mean_latency_s": float(lat.mean()),
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p90_latency_s": float(np.percentile(lat, 90)),
+        "p95_latency_s": float(np.percentile(lat, 95)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "throughput_rps": len(served) / span,
+        "tokens_per_s": float(sum(r["n"] + r["m_out"]
+                                  for r in served)) / span,
+    })
+    return out
+
+
+def _des_twin(mix: WorkloadMix, issued: np.ndarray,
+              qsl: QuerySampleLibrary) -> Dict[str, float]:
+    """Replay the SAME issue times through the matched DES."""
+    sched, tiers = _des_setup(mix)
+    stream = make_trace_stream(issued, qsl.n.astype(np.float64),
+                               qsl.m_out, slo_s=mix.slo_s)
+    return simulate_des(sched, stream, tiers, seed=_SEED).summary()
+
+
+def _drift(real: Dict[str, float],
+           twin: Dict[str, float]) -> Dict[str, float]:
+    """Relative modelled-vs-real drift, (real - modelled) / modelled,
+    for the latency keys both sides report.  Reported, not gated: the
+    engine and the DES are different queueing models of the same fleet,
+    and the scoreboard tracks how far apart they sit per scenario."""
+    out = {}
+    for k in ("mean_latency_s", "p50_latency_s", "p95_latency_s"):
+        t, r = twin.get(k), real.get(k)
+        if t and np.isfinite(t) and r is not None and np.isfinite(r):
+            out[k] = (r - t) / t
+    return out
+
+
+# ------------------------------------------------------------------ run --
+def run(n_requests: int = 2000, rate_hz: float = 10.0,
+        concurrency: int = 8, think_s: float = 0.01,
+        verbose: bool = True, check: bool = True,
+        out_json: Optional[str] = None,
+        mixes: Sequence[str] = ("chat", "doc"),
+        scenarios: Sequence[str] = SCENARIOS,
+        trace_path: Optional[str] = None):
+    """Full scenario x mix sweep against the real engine + DES twin.
+
+    Returns ``(rows, csv)``; ``rows[(scenario, mix)]`` holds the engine
+    summary, the DES-twin summary and the drift between them.  With
+    ``check=True`` the run raises unless every scenario served requests,
+    the trace replay issued EXACTLY the file's arrival times, and the
+    closed loop never exceeded its concurrency.
+    """
+    rows: Dict[Tuple[str, str], Dict] = {}
+    csv: List[str] = []
+    for mix_name in mixes:
+        mix = MIXES[mix_name]
+        for scenario in scenarios:
+            qsl = QuerySampleLibrary(mix, n_requests)
+            sut = EngineSUT(mix)
+            tag = f"{scenario}/{mix_name}"
+            if scenario == "poisson":
+                arr = poisson_arrivals(rate_hz, n_requests, seed=_SEED + 11)
+                issued = run_open_loop(sut, qsl, arr, tag=tag)
+            elif scenario == "bursty":
+                arr = bursty_arrivals(
+                    n_requests, base_rate_hz=0.5 * rate_hz, peak_factor=4.0,
+                    period_s=max(n_requests / rate_hz / 2.0, 30.0),
+                    seed=_SEED + 13)
+                issued = run_open_loop(sut, qsl, arr, tag=tag)
+            elif scenario == "trace":
+                arr, path, own = _trace_arrivals(n_requests, rate_hz,
+                                                 trace_path)
+                issued = run_open_loop(sut, qsl, arr, tag=tag)
+                if check and not np.array_equal(issued, load_trace(path)):
+                    raise AssertionError(
+                        "[loadgen] trace replay: issued times deviate "
+                        "from the trace file")
+                if own:
+                    os.unlink(path)
+            elif scenario == "closed":
+                issued = run_closed_loop(sut, qsl, concurrency=concurrency,
+                                         think_s=think_s, tag=tag)
+                peak = max_in_flight(sut.records)
+                if check and peak > concurrency:
+                    raise AssertionError(
+                        f"[loadgen] closed loop exceeded its concurrency: "
+                        f"{peak} > {concurrency}")
+            else:
+                raise ValueError(f"unknown scenario {scenario!r}")
+
+            real = _summarize(sut.records, sut.engine)
+            twin = _des_twin(mix, issued, qsl)
+            drift = _drift(real, twin)
+            if check and real["served"] == 0:
+                raise AssertionError(
+                    f"[loadgen] {tag}: no request was served")
+            rows[(scenario, mix_name)] = {"engine": real, "des_twin": twin,
+                                          "drift": drift}
+            csv.append(f"loadgen_{scenario}_{mix_name},"
+                       f"{real['mean_latency_s'] * 1e6:.1f},"
+                       f"p95={real['p95_latency_s'] * 1e3:.1f}ms"
+                       f"|slo={real['slo_attainment']:.3f}"
+                       f"|thr={real['throughput_rps']:.1f}rps"
+                       f"|shed={int(real['shed'])}")
+            if verbose:
+                d95 = drift.get("p95_latency_s", float("nan"))
+                print(f"[loadgen] {tag:14s} p50={real['p50_latency_s']*1e3:7.1f}ms "
+                      f"p95={real['p95_latency_s']*1e3:7.1f}ms "
+                      f"p99={real['p99_latency_s']*1e3:7.1f}ms "
+                      f"slo={real['slo_attainment']:.3f} "
+                      f"thr={real['throughput_rps']:6.1f}rps "
+                      f"shed={int(real['shed']):4d} "
+                      f"des-drift(p95)={d95:+.2%}")
+
+    if out_json:
+        payload = {
+            "setup": {"n_requests": n_requests, "rate_hz": rate_hz,
+                      "concurrency": concurrency, "think_s": think_s,
+                      "seed": _SEED, "mixes": list(mixes),
+                      "scenarios": list(scenarios)},
+            "scenarios": [{"scenario": s, "mix": m,
+                           "slo_s": MIXES[m].slo_s, **row}
+                          for (s, m), row in rows.items()],
+        }
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        if verbose:
+            print(f"[loadgen] wrote {out_json}")
+    return rows, csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI invocation (small request counts)")
+    ap.add_argument("--json", default=None, help="dump results JSON here")
+    args = ap.parse_args()
+    smoke = args.smoke or bool(int(os.environ.get("REPRO_SMOKE", "0")))
+    if smoke:
+        run(n_requests=150, out_json=args.json)
+    else:
+        run(out_json=args.json)

@@ -16,6 +16,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
                (backbone bandwidth x length sweep + two-leg DES replay)
   faults     — fault-tolerant serving: injected tier outages / link
                blackholes, no-retry baseline vs breaker-masked failover
+  loadgen    — MLPerf-style load generation against the real engine:
+               Poisson / closed-loop / bursty / trace-replay arrivals
+               over mixed workloads, with a DES-twin drift report
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -94,6 +97,13 @@ def main() -> None:
                                      out_json="BENCH_faults.json")
     else:
         _, csv = fault_tolerance.run(out_json="BENCH_faults.json")
+    csv_all += csv
+
+    from benchmarks import loadgen
+    if fast:
+        _, csv = loadgen.run(n_requests=300, out_json="BENCH_loadgen.json")
+    else:
+        _, csv = loadgen.run(out_json="BENCH_loadgen.json")
     csv_all += csv
 
     from benchmarks import roofline

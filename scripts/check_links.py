@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Docs link checker: every relative markdown link in README.md and
+docs/*.md must resolve to an existing file or directory.
+
+Checks inline links ``[text](target)`` (images included).  External
+schemes (http/https/mailto) and pure in-page anchors (``#...``) are
+skipped; a ``target#fragment`` is checked against the file part only.
+Exit status 0 when everything resolves, 1 otherwise (one line per
+broken link) — run as a CI step and from tests/test_docs_links.py.
+
+Usage: python scripts/check_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) with no nested parens in the target; ! prefix = image
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^()\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path):
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def broken_links(root: Path):
+    """Yield (file, target) for every relative link that does not resolve."""
+    for md in doc_files(root):
+        for target in _LINK.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                yield md.relative_to(root), target
+
+
+def main(argv) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 \
+        else Path(__file__).resolve().parent.parent
+    bad = list(broken_links(root))
+    for md, target in bad:
+        print(f"BROKEN {md}: ({target})")
+    n_files = len(doc_files(root))
+    if bad:
+        print(f"link check FAILED: {len(bad)} broken link(s) "
+              f"across {n_files} file(s)")
+        return 1
+    print(f"link check OK: {n_files} file(s), all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -62,16 +62,27 @@ CLOUD = 1
 
 @dataclasses.dataclass
 class Decision:
+    """One two-tier routing decision (paper Eq. (1)).
+
+    ``t_edge_pred``/``t_cloud_pred`` are the scheduler's *predicted*
+    totals in seconds (estimator outputs — plane at (N, M̂) plus, for
+    the cloud, the estimated T_tx), not measured ground truth; ``m_hat``
+    is the N→M regressor's predicted output length in tokens.
+    """
+
     device: int           # EDGE or CLOUD
-    t_edge_pred: float
-    t_cloud_pred: float   # includes predicted T_tx
-    m_hat: float
+    t_edge_pred: float    # seconds, predicted
+    t_cloud_pred: float   # seconds, predicted (includes predicted T_tx)
+    m_hat: float          # tokens, predicted output length
 
 
 class BaseScheduler:
     name = "base"
 
     def decide(self, n: int, now_s: float, tx: TxEstimator) -> Decision:
+        """Route one request of ``n`` input tokens arriving at ``now_s``
+        seconds, reading the link only through ``tx`` (the §II-C
+        estimator state)."""
         raise NotImplementedError
 
 
@@ -87,6 +98,11 @@ class CNMTScheduler(BaseScheduler):
     name: str = "c-nmt"
 
     def decide(self, n: int, now_s: float, tx: TxEstimator) -> Decision:
+        """Paper Eq. (1) for one request: edge plane vs cloud plane +
+        estimated T_tx at (N, M̂), all in seconds.  This exact float op
+        order is the compatibility contract the N=2
+        :class:`MultiTierScheduler` reduction is pinned against
+        bit-for-bit (tests/test_multitier.py)."""
         m_hat = float(np.asarray(self.n2m.predict(float(n))))
         m_hat = max(m_hat, 1.0)
         t_e = float(np.asarray(self.edge.model.predict(float(n), m_hat)))
@@ -197,9 +213,17 @@ class PlacementPlan:
 
 @dataclasses.dataclass
 class MultiTierDecision:
+    """One N-tier routing decision.
+
+    ``t_pred`` holds the scheduler's per-tier predicted totals in
+    seconds (T_queue + T_tx + T_exe at (N, M̂) — estimator outputs, with
+    excluded tiers priced at ``inf``); admission/reroute logic ranks on
+    it downstream.  ``m_hat`` is the predicted output length in tokens.
+    """
+
     tier: int                  # index into the scheduler's tier list
-    t_pred: Tuple[float, ...]  # per-tier predicted T_queue + T_tx + T_exe
-    m_hat: float
+    t_pred: Tuple[float, ...]  # per-tier predicted T_queue + T_tx + T_exe (s)
+    m_hat: float               # tokens, predicted output length
     # Plan-aware extensions (None on the scalar decide paths): the chosen
     # placement, and the predicted total per evaluated plan.  ``tier``
     # stays the *decode* tier of the plan so existing per-tier admission
@@ -296,6 +320,9 @@ class MultiTierScheduler(BaseScheduler):
         return best
 
     def m_hat(self, n: float) -> float:
+        """Predicted output length in tokens for ``n`` input tokens
+        (N→M regressor, floored at 1 so plane predictions stay
+        positive) — the estimator every T_exe term is priced at."""
         return max(float(np.asarray(self.n2m.predict(float(n)))), 1.0)
 
     def queue_delay(self, k: int, backlog_s: float, in_system: int,

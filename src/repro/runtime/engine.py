@@ -161,7 +161,17 @@ class Tier:
 
     def run(self, tokens: np.ndarray, m_hat: float,
             rng: np.random.Generator) -> tuple[int, float]:
-        """Returns (output_len, execution_seconds)."""
+        """Execute one request on this tier: returns
+        ``(output_len_tokens, execution_seconds)``.
+
+        With a real ``executor`` the time is measured wall-clock and
+        ``m_out`` is the model's actual output length (ground truth);
+        without one the tier is MODELLED — the time is drawn around the
+        profile's plane at the *predicted* ``m_hat`` (an estimator
+        input), and ``m_out`` is ``round(m_hat)``.  Exactly one of the
+        two paths runs; the engine's accounting downstream is identical
+        for both.
+        """
         if self.executor is not None:
             t0 = time.perf_counter()
             m_out, _ = self.executor(tokens)
@@ -261,6 +271,17 @@ class _TierOccupancy:
 
 @dataclasses.dataclass
 class RequestResult:
+    """One request's terminal record (served or shed).
+
+    All ``*_s`` fields are seconds of the engine's virtual clock;
+    ``latency_s`` is what the client experienced end to end (queue wait
+    + execution + link legs + any retry delays), ground truth rather
+    than the scheduler's prediction — the prediction that routed the
+    request is preserved in ``decision``.  Appending fields (with
+    defaults) is backward-compatible; the existing fields are pinned by
+    the bit-for-bit engine-semantics tests.
+    """
+
     req_id: int
     device: int           # tier index (EDGE/CLOUD for the 2-tier config);
                           # -1 when the request was shed
@@ -271,6 +292,9 @@ class RequestResult:
     decision: MultiTierDecision
     wait_s: float = 0.0
     tier_name: str = ""
+    # free-form client label (e.g. loadgen's scenario/workload-mix tag);
+    # never read by routing — observability only
+    tag: Optional[str] = None
     deadline_s: Optional[float] = None   # relative SLO, None = no deadline
     shed: bool = False    # dropped by deadline-aware admission control
     # the executed placement; None on the scalar path, whole(device) or
@@ -369,6 +393,13 @@ class CollaborativeEngine:
                      for t in self.tiers]
         self.rng = np.random.default_rng(seed)
         self.results: List[RequestResult] = []
+        # completion callback (loadgen hook): invoked with each terminal
+        # RequestResult — after any fault-tolerant retry adjustments —
+        # once per request, in completion order for ``submit`` and in
+        # request order for the batch/continuous entry points.  Closed-
+        # loop load generators hang their next-issue logic off it.
+        # ``None`` (default) is a strict no-op: no behaviour change.
+        self.on_complete: Optional[Callable[[RequestResult], None]] = None
         self.rejected = np.zeros(len(self.tiers), np.int64)
         self.shed_count = np.zeros(len(self.tiers), np.int64)
         self._t0 = time.perf_counter()
@@ -416,14 +447,30 @@ class CollaborativeEngine:
     def _now(self) -> float:
         return time.perf_counter() - self._t0
 
+    def _notify(self, res: RequestResult,
+                tag: Optional[str]) -> RequestResult:
+        """Terminal-result hook tail: attach the client's ``tag`` and
+        fire ``on_complete``.  Called exactly once per request by the
+        public entry points, after all latency adjustments."""
+        if tag is not None:
+            res.tag = tag
+        if self.on_complete is not None:
+            self.on_complete(res)
+        return res
+
     # ------------------------------------------------------------- submit --
     def submit(self, tokens: np.ndarray, *, now_s: Optional[float] = None,
-               deadline_s: Optional[float] = None) -> RequestResult:
+               deadline_s: Optional[float] = None,
+               tag: Optional[str] = None) -> RequestResult:
         """Route and (virtually) serve one request.
 
-        ``deadline_s`` is a relative SLO: the deadline-aware admission
-        path may shed the request (returned with ``shed=True`` and NaN
-        latency) when no tier is predicted to meet it.
+        ``deadline_s`` is a relative SLO (seconds from ``now_s``): the
+        deadline-aware admission path may shed the request (returned
+        with ``shed=True`` and NaN latency) when no tier is predicted to
+        meet it.  ``tag`` is a free-form client label copied onto the
+        result (per-request tagging for load generators); routing never
+        reads it.  ``on_complete`` (if set) fires with the final result
+        before this returns.
 
         With fault tolerance armed (``faults``/``retry``/``breaker``)
         dispatch goes through the bounded-retry failover loop: a failed
@@ -434,8 +481,10 @@ class CollaborativeEngine:
         """
         now = self._now() if now_s is None else now_s
         if self._ft:
-            return self._submit_ft(tokens, now, deadline_s)
-        return self._submit_once(tokens, now, deadline_s)
+            res = self._submit_ft(tokens, now, deadline_s)
+        else:
+            res = self._submit_once(tokens, now, deadline_s)
+        return self._notify(res, tag)
 
     def _submit_once(self, tokens: np.ndarray, now: float,
                      deadline_s: Optional[float]) -> RequestResult:
@@ -857,6 +906,7 @@ class CollaborativeEngine:
     def submit_batch(self, requests: Sequence[np.ndarray], *,
                      now_s: Optional[float] = None,
                      deadline_s: Optional[float] = None,
+                     tag: Optional[str] = None,
                      ) -> List[RequestResult]:
         """Route and serve a slot of CONCURRENT requests with real
         batched execution.
@@ -885,8 +935,9 @@ class CollaborativeEngine:
             # fault-tolerant batch serving degenerates to per-request
             # failover dispatch: a member's failure/retry timeline is
             # per-request state a shared batched generate cannot carry
-            return [self._submit_ft(np.asarray(t, np.int32), now,
-                                    deadline_s) for t in requests]
+            return [self._notify(self._submit_ft(np.asarray(t, np.int32),
+                                                 now, deadline_s), tag)
+                    for t in requests]
         results: List[Optional[RequestResult]] = [None] * len(requests)
         groups: Dict[int, List[tuple]] = {}
         pending = [0] * len(self.tiers)
@@ -938,7 +989,7 @@ class CollaborativeEngine:
                     results[i] = self._complete(
                         k, d, len(toks), int(m_out), exec_s, wait,
                         service_s, now, deadline_s)
-        return results
+        return [self._notify(r, tag) for r in results]
 
     # ---------------------------------------------------- serve_continuous --
     def serve_continuous(self, requests: Sequence[np.ndarray], *,
@@ -1088,7 +1139,7 @@ class CollaborativeEngine:
                 if tclock[k] <= now and (queues[k]
                                          or sessions[k].live_count):
                     drain(k)
-        return results  # type: ignore[return-value]
+        return [self._notify(r, None) for r in results]  # type: ignore[return-value]
 
     def _admit(self, d: MultiTierDecision, now: float,
                deadline_s: Optional[float] = None,

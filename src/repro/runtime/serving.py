@@ -47,6 +47,12 @@ finished rows hostage, which is the p95 lever under heavy Poisson load
 :func:`~repro.nmt.common.greedy_update` the compiled scan uses, so the
 two paths cannot drift; ``serve(..., refill=False)`` degenerates to
 exact block-to-completion scheduling for the parity pins.
+
+Everything built here plugs into :class:`~repro.runtime.engine.Tier`s
+of the ``CollaborativeEngine``, which the load-generation harness
+(``benchmarks/loadgen.py``) drives under MLPerf-style arrival
+processes, recording completions through the engine's ``on_complete``
+hook — see ``docs/architecture.md`` for the request lifecycle.
 """
 
 from __future__ import annotations

@@ -1,0 +1,42 @@
+"""Docs tree integrity: the pages ISSUE 9 ships exist, are linked from
+README, and every relative link in README.md + docs/*.md resolves
+(scripts/check_links.py — the same checker CI runs)."""
+
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+if str(_ROOT / "scripts") not in sys.path:
+    sys.path.insert(0, str(_ROOT / "scripts"))
+
+import check_links  # noqa: E402
+
+_PAGES = ("docs/architecture.md", "docs/scheduler.md", "docs/benchmarks.md")
+
+
+def test_docs_pages_exist_and_are_linked_from_readme():
+    readme = (_ROOT / "README.md").read_text(encoding="utf-8")
+    for page in _PAGES:
+        assert (_ROOT / page).is_file(), page
+        assert page in readme, f"README does not link {page}"
+
+
+def test_all_relative_doc_links_resolve():
+    assert list(check_links.broken_links(_ROOT)) == []
+
+
+def test_checker_flags_broken_links(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "[ok](docs/page.md) [bad](docs/missing.md) "
+        "[ext](https://example.com) [anchor](#x)")
+    (tmp_path / "docs" / "page.md").write_text(
+        "[up](../README.md) [gone](nope.md#frag)")
+    bad = sorted(str(t) for _, t in check_links.broken_links(tmp_path))
+    assert bad == ["docs/missing.md", "nope.md#frag"]
+
+
+def test_checker_cli_exit_codes(tmp_path):
+    (tmp_path / "README.md").write_text("[bad](gone.md)")
+    assert check_links.main(["check_links.py", str(tmp_path)]) == 1
+    assert check_links.main(["check_links.py", str(_ROOT)]) == 0

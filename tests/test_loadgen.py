@@ -1,0 +1,189 @@
+"""Load-generation harness (benchmarks/loadgen.py) + arrival processes.
+
+Pins the ISSUE-9 acceptance contracts:
+
+* arrival generators are deterministic — same seed, bit-identical trace;
+* the bursty thinning sampler actually tracks its diurnal rate;
+* trace save/load round-trips float64 arrival times exactly, and
+  ``make_trace_stream`` emits them verbatim;
+* the engine's loadgen hooks (per-request ``tag``, ``on_complete``)
+  fire exactly once per request and default to strict no-ops;
+* the closed loop never exceeds its concurrency;
+* the trace-replay scenario issues EXACTLY the trace file's times;
+* every scenario x mix smoke-runs against the real engine with a DES
+  twin alongside.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+_ROOT = Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
+
+from benchmarks import loadgen  # noqa: E402
+from repro.core.arrivals import (  # noqa: E402
+    bursty_arrivals,
+    diurnal_rate,
+    load_trace,
+    poisson_arrivals,
+    save_trace,
+)
+from repro.core.latency_model import DeviceProfile, LinearLatencyModel  # noqa: E402
+from repro.core.length_regressor import LinearN2M  # noqa: E402
+from repro.core.simulator import make_trace_stream  # noqa: E402
+from repro.runtime.engine import CollaborativeEngine, Tier  # noqa: E402
+
+
+# ------------------------------------------------------ arrival processes --
+def test_poisson_arrivals_deterministic_and_increasing():
+    a = poisson_arrivals(5.0, 200, seed=3)
+    b = poisson_arrivals(5.0, 200, seed=3)
+    assert np.array_equal(a, b)          # same seed -> bit-identical
+    assert not np.array_equal(a, poisson_arrivals(5.0, 200, seed=4))
+    assert np.all(np.diff(a) > 0)
+    # mean gap ~ 1/rate (loose: 200 samples)
+    assert abs(float(np.diff(a).mean()) - 0.2) < 0.05
+    assert poisson_arrivals(5.0, 3, seed=0, t0=10.0)[0] > 10.0
+
+
+def test_poisson_arrivals_validation():
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 10)
+    with pytest.raises(ValueError):
+        poisson_arrivals(1.0, -1)
+
+
+def test_bursty_arrivals_deterministic():
+    a = bursty_arrivals(300, base_rate_hz=5.0, seed=7)
+    b = bursty_arrivals(300, base_rate_hz=5.0, seed=7)
+    assert np.array_equal(a, b)
+    assert np.all(np.diff(a) > 0)
+    with pytest.raises(ValueError):
+        bursty_arrivals(10, base_rate_hz=5.0, peak_factor=0.5)
+
+
+def test_diurnal_rate_trough_and_peak():
+    assert diurnal_rate(0.0, 2.0, 4.0, 60.0) == pytest.approx(2.0)
+    assert diurnal_rate(30.0, 2.0, 4.0, 60.0) == pytest.approx(8.0)
+    assert diurnal_rate(60.0, 2.0, 4.0, 60.0) == pytest.approx(2.0)
+
+
+def test_bursty_sampler_tracks_the_diurnal_modulation():
+    period = 40.0
+    arr = bursty_arrivals(2000, base_rate_hz=5.0, peak_factor=4.0,
+                          period_s=period, seed=1)
+    phase = np.mod(arr, period) / period
+    peak_half = int(((phase > 0.25) & (phase < 0.75)).sum())
+    trough_half = len(arr) - peak_half
+    # peak rate is 4x the trough rate; the split should be lopsided
+    assert peak_half > 1.8 * trough_half
+
+
+# ------------------------------------------------------------- trace I/O --
+def test_trace_roundtrip_is_exact(tmp_path):
+    arr = poisson_arrivals(11.0, 257, seed=13)
+    p = tmp_path / "trace.json"
+    save_trace(p, arr, meta={"rate_hz": 11.0})
+    back = load_trace(p)
+    assert back.dtype == np.float64
+    assert np.array_equal(back, arr)     # bit-for-bit through JSON
+
+    stream = make_trace_stream(back, np.ones(257), np.ones(257))
+    assert np.array_equal(stream.t_arrival_s, arr)
+
+
+def test_trace_validation(tmp_path):
+    with pytest.raises(ValueError):
+        save_trace(tmp_path / "x.json", [[0.0, 1.0]])      # not 1-D
+    with pytest.raises(ValueError):
+        save_trace(tmp_path / "x.json", [2.0, 1.0])        # decreasing
+    (tmp_path / "junk.json").write_text('{"nope": 1}')
+    with pytest.raises(ValueError):
+        load_trace(tmp_path / "junk.json")
+    with pytest.raises(ValueError):
+        make_trace_stream([0.0, 1.0], [1, 2, 3], [1, 2, 3])  # len mismatch
+    with pytest.raises(ValueError):
+        make_trace_stream([1.0, 0.5], [1, 2], [1, 2])      # decreasing
+
+
+# ------------------------------------------------------------ engine hooks --
+def _tiny_engine():
+    prof = DeviceProfile("t", LinearLatencyModel(1e-4, 1e-4, 1e-3), 0.05)
+    return CollaborativeEngine(n2m=LinearN2M(0.9, 2.0),
+                               tiers=[Tier(prof)], seed=0)
+
+
+def test_engine_tag_and_on_complete_hook():
+    eng = _tiny_engine()
+    seen = []
+    eng.on_complete = seen.append
+    res = eng.submit(np.zeros(5, np.int32), now_s=0.0, tag="poisson/chat")
+    assert res.tag == "poisson/chat"
+    assert seen == [res]                 # fired exactly once, with the result
+    batch = eng.submit_batch([np.zeros(3, np.int32)] * 2, now_s=1.0,
+                             tag="b")
+    assert [r.tag for r in batch] == ["b", "b"]
+    assert seen[1:] == batch
+
+
+def test_engine_hooks_default_to_noop():
+    eng = _tiny_engine()
+    res = eng.submit(np.zeros(5, np.int32), now_s=0.0)
+    assert res.tag is None and eng.on_complete is None
+
+
+# -------------------------------------------------------------- scenarios --
+def test_closed_loop_concurrency_invariant():
+    mix = loadgen.MIXES["chat"]
+    qsl = loadgen.QuerySampleLibrary(mix, 60)
+    sut = loadgen.EngineSUT(mix)
+    issued = loadgen.run_closed_loop(sut, qsl, concurrency=3,
+                                     think_s=0.005, tag="closed/chat")
+    assert np.all(np.diff(issued) >= 0)
+    assert len(sut.records) == 60
+    assert loadgen.max_in_flight(sut.records) <= 3
+
+
+def test_trace_replay_issues_exactly_the_file(tmp_path):
+    path = tmp_path / "trace.json"
+    arr, p, own = loadgen._trace_arrivals(50, 12.0, str(path))
+    assert not own and p == str(path)
+    mix = loadgen.MIXES["doc"]
+    qsl = loadgen.QuerySampleLibrary(mix, 50)
+    sut = loadgen.EngineSUT(mix)
+    issued = loadgen.run_open_loop(sut, qsl, arr, tag="trace/doc")
+    assert np.array_equal(issued, load_trace(path))   # bit-for-bit
+    assert np.array_equal(np.asarray([r["issue_s"] for r in sut.records]),
+                          load_trace(path))
+
+
+@pytest.mark.slow
+def test_loadgen_smoke_all_scenarios(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SMOKE", "1")
+    out = tmp_path / "BENCH_loadgen.json"
+    rows, csv = loadgen.run(n_requests=40, verbose=False, check=True,
+                            out_json=str(out))
+    assert set(rows) == {(s, m) for s in loadgen.SCENARIOS
+                         for m in ("chat", "doc")}
+    for (s, m), row in rows.items():
+        assert row["engine"]["served"] > 0
+        assert 0.0 <= row["engine"]["slo_attainment"] <= 1.0
+        assert row["des_twin"]["served"] > 0
+        assert "p95_latency_s" in row["drift"]
+    payload = json.loads(out.read_text())
+    tags = {(e["scenario"], e["mix"]) for e in payload["scenarios"]}
+    assert tags == set(rows)
+    assert len(csv) == len(rows)
+
+
+def test_loadgen_run_is_deterministic():
+    kw = dict(n_requests=25, verbose=False, check=True,
+              mixes=("chat",), scenarios=("poisson", "closed"))
+    r1, _ = loadgen.run(**kw)
+    r2, _ = loadgen.run(**kw)
+    assert r1 == r2

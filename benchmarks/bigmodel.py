@@ -1,0 +1,285 @@
+"""Big-model tier characterization: Fig. 2a / Table 1 re-run on the
+``models/model.py`` stack, per-architecture N→M regressors, and the
+mixer-kernel throughput gate.
+
+Four serving workloads, one per architecture family:
+
+* ``qwen3-8b``          — decoder-only chat (GQA attention);
+* ``rwkv6-3b``          — linear-attention RNN (rwkv6 mixers);
+* ``zamba2-1.2b``       — mamba2-hybrid (SSD mixers + shared attention);
+* ``whisper-large-v3``  — encoder-decoder transcription (audio frames in).
+
+Per architecture this benchmark
+
+1. measures REAL ``GenerationSession`` wall-clock over an (N, M) grid —
+   the compiled scan decode runs exactly ``max_new`` steps, so M is
+   forced the same way the paper forces output length in Fig. 2a — and
+   fits the ``T_exe = alpha_n*N + alpha_m*M + beta`` plane (Table 1's
+   characterization step);
+2. fits the per-architecture ``LinearN2M`` length regressor
+   (M̂ = gamma*N + delta) from that workload's (N, M) corpus — chat
+   expands, transcription compresses — and reports gamma/delta/R²;
+3. hands BOTH to a :class:`~repro.core.scheduler.MultiTierScheduler`
+   (edge = rwkv6 plane, cloud = this arch's plane behind a WAN link) and
+   replays a length sweep through ``decide`` to report the offload
+   fraction the fitted models induce.
+
+MIXER GATE — the kernel regression tripwire.  For the recurrent plans
+(rwkv6, mamba2-hybrid) the chunked kernel formulation (what
+``kernels/rwkv6_wkv.py`` / ``kernels/ssd_scan.py`` implement, routed via
+``LM(mixer_impl="pallas")``) must beat the per-token sequential XLA path
+(a ``lax.scan`` of ``decode_step`` over the prompt) in prefill
+tokens/sec at batch >= 8, or this benchmark HARD-FAILS (RuntimeError).
+On TPU the real Pallas kernels are timed; on CPU, where Pallas interpret
+mode is a debugging emulator (orders of magnitude off), the gate times
+the XLA lowering of the SAME chunked formulation — bit-for-bit
+parity-pinned to the kernels by tests/test_kernels.py and
+tests/test_bigmodel_serving.py — and records ``emulated_kernels: true``
+in the JSON.
+
+Artifacts: ``name,us_per_call,derived`` CSV lines for the bench
+trajectory plus ``BENCH_bigmodel.json`` (schema in docs/benchmarks.md).
+
+Run: PYTHONPATH=src python benchmarks/bigmodel.py [--smoke]
+     [--json BENCH_bigmodel.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.latency_model import LinearLatencyModel
+from repro.core.length_regressor import LinearN2M
+from repro.core.scheduler import MultiTierScheduler, SchedTier
+from repro.core.tx_estimator import TxEstimator
+from repro.models.registry import resolve
+from repro.runtime.serving import GenerationSession
+
+# workload -> (arch, synthetic N->M law (gamma, delta, noise)) used to
+# draw the per-arch length corpus: chat expands, transcription of a
+# fixed audio window compresses toward a caption
+ARCHS = (
+    ("qwen3-8b", "chat-dense", (1.5, 6.0, 3.0)),
+    ("rwkv6-3b", "rwkv6", (1.2, 3.0, 2.0)),
+    ("zamba2-1.2b", "mamba2-hybrid", (1.3, 4.0, 2.5)),
+    ("whisper-large-v3", "transcription", (0.35, 8.0, 1.5)),
+)
+GATE_ARCHS = ("rwkv6-3b", "zamba2-1.2b")
+
+
+def _time_best(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ------------------------------------------------ characterization -----
+def _measure_grid(arch: str, n_grid, m_grid, reps: int):
+    """(N, M, t_s) samples: real generate calls at forced output length
+    (the compiled scan always runs max_new steps)."""
+    r = resolve(arch)
+    params = r.model.init(jax.random.PRNGKey(0))
+    cap = max(n_grid) + max(m_grid) + 2
+    sess = GenerationSession(r.model, params, max_len=cap)
+    rng = np.random.default_rng(0)
+    enc = r.cfg.encoder
+    frames = (None if enc is None else
+              rng.standard_normal((1, enc.max_frames, r.cfg.d_model))
+              .astype(np.float32))
+    rows = []
+    for n in n_grid:
+        toks = rng.integers(4, r.cfg.vocab_size, (1, n)).astype(np.int32)
+        for m in m_grid:
+            kw = {} if frames is None else {"frames": frames}
+            sess.generate_with_lengths(toks, max_new=m, **kw)   # compile
+            t = _time_best(
+                lambda: sess.generate_with_lengths(toks, max_new=m, **kw),
+                reps)
+            rows.append({"n": int(n), "m": int(m), "t_s": t})
+    return rows
+
+
+def _fit_plane(rows) -> LinearLatencyModel:
+    return LinearLatencyModel().fit(
+        np.array([r["n"] for r in rows], np.float64),
+        np.array([r["m"] for r in rows], np.float64),
+        np.array([r["t_s"] for r in rows], np.float64))
+
+
+def _fit_n2m(law, n_samples: int, seed: int):
+    """Per-arch length corpus (synthetic law + noise) -> fitted LinearN2M."""
+    gamma, delta, noise = law
+    rng = np.random.default_rng(seed)
+    n = rng.integers(4, 256, n_samples).astype(np.float64)
+    m = np.maximum(gamma * n + delta + rng.normal(0.0, noise, n_samples), 1.0)
+    est = LinearN2M().fit(n, m)
+    return est, {"gamma": est.gamma, "delta": est.delta,
+                 "r2": est.r2(n, m)}, (n, m)
+
+
+def _offload_frac(edge_plane, cloud_plane, n2m, n_corpus, *,
+                  speedup: float = 6.0, rtt_s: float = 0.06) -> float:
+    """The fitted plane + regressor consumed by MultiTierScheduler: how
+    often Eq. (1) offloads this workload to a ``speedup``x cloud behind
+    ``rtt_s`` of WAN."""
+    import dataclasses
+
+    fast = dataclasses.replace(cloud_plane,
+                               alpha_n=cloud_plane.alpha_n / speedup,
+                               alpha_m=cloud_plane.alpha_m / speedup,
+                               beta=cloud_plane.beta / speedup)
+    tx = TxEstimator(bandwidth_bps=100e6)
+    tx.observe(0.0, rtt_s)
+    sched = MultiTierScheduler(
+        [SchedTier("edge", edge_plane),
+         SchedTier("cloud", fast, tx=tx)], n2m)
+    picks = [sched.decide(int(n), 0.0).tier for n in n_corpus]
+    return float(np.mean([p == 1 for p in picks]))
+
+
+# ------------------------------------------------------- mixer gate ----
+def _stepwise_prefill(model, params, tokens):
+    """Per-token sequential XLA prefill: lax.scan of decode_step over the
+    prompt — the O(S) recurrence the chunked kernels replace."""
+    import jax.numpy as jnp
+
+    b, s = tokens.shape
+    state = model.init_decode_state(params, b, max_len=s + 1)
+
+    def body(st, tok):
+        logits, st2 = model.decode_step(params, st, tok[:, None])
+        return st2, logits
+
+    state, logits = jax.lax.scan(body, state, jnp.asarray(tokens).T)
+    return logits[-1]
+
+
+def _gate_cell(arch: str, batch: int, seq: int, reps: int, impl: str):
+    r = resolve(arch, mixer_impl=impl)
+    params = r.model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(4, r.cfg.vocab_size, (batch, seq)).astype(np.int32)
+
+    chunked = jax.jit(lambda p, t: r.model.prefill(p, t, max_len=seq + 1)[0])
+    stepwise = jax.jit(lambda p, t: _stepwise_prefill(r.model, p, t))
+    np.asarray(chunked(params, toks))        # compile both
+    np.asarray(stepwise(params, toks))
+    t_chunk = _time_best(lambda: np.asarray(chunked(params, toks)), reps)
+    t_step = _time_best(lambda: np.asarray(stepwise(params, toks)), reps)
+    n_tok = batch * seq
+    return {"arch": arch, "batch": batch, "seq": seq,
+            "chunked_tok_s": n_tok / t_chunk,
+            "stepwise_tok_s": n_tok / t_step,
+            "speedup": t_step / t_chunk}
+
+
+# ------------------------------------------------------------- driver --
+def run(n_grid=(8, 16, 32), m_grid=(8, 16, 32), reps: int = 3,
+        n2m_samples: int = 2000, gate_batch: int = 8, gate_seq: int = 128,
+        verbose: bool = True, out_json: str | None = None):
+    backend = jax.default_backend()
+    emulated = backend != "tpu"
+    impl = "xla" if emulated else "pallas"
+
+    archs_out = {}
+    csv = []
+    edge_plane = None
+    n2m_by_arch = {}
+    for idx, (arch, workload, law) in enumerate(ARCHS):
+        rows = _measure_grid(arch, n_grid, m_grid, reps)
+        plane = _fit_plane(rows)
+        est, n2m_stats, (n_corpus, _) = _fit_n2m(law, n2m_samples, seed=idx)
+        n2m_by_arch[arch] = (est, n2m_stats, n_corpus)
+        if arch == "rwkv6-3b":
+            edge_plane = plane
+        archs_out[arch] = {
+            "workload": workload,
+            "rows": rows,
+            "plane": {"alpha_n": plane.alpha_n, "alpha_m": plane.alpha_m,
+                      "beta": plane.beta},
+            "n2m": n2m_stats,
+        }
+        if verbose:
+            mean_us = float(np.mean([r["t_s"] for r in rows])) * 1e6
+            print(f"[bigmodel] {arch:18s} ({workload}): "
+                  f"aN={plane.alpha_n*1e3:.3f}ms aM={plane.alpha_m*1e3:.3f}ms "
+                  f"b={plane.beta*1e3:.1f}ms  "
+                  f"n2m gamma={n2m_stats['gamma']:.3f} "
+                  f"delta={n2m_stats['delta']:.2f} r2={n2m_stats['r2']:.3f}  "
+                  f"(mean cell {mean_us/1e3:.1f}ms)")
+
+    # per-arch regressor + plane consumed by the N-tier rule
+    for arch, workload, _ in ARCHS:
+        est, n2m_stats, n_corpus = n2m_by_arch[arch]
+        plane = LinearLatencyModel(**archs_out[arch]["plane"])
+        frac = _offload_frac(edge_plane, plane, est, n_corpus[:200])
+        archs_out[arch]["offload_frac"] = frac
+        mean_t = float(np.mean([r["t_s"] for r in archs_out[arch]["rows"]]))
+        csv.append(f"bigmodel_{arch},{mean_t*1e6:.1f},"
+                   f"gamma={n2m_stats['gamma']:.2f}|r2={n2m_stats['r2']:.3f}"
+                   f"|offload={frac*100:.0f}%")
+        if verbose:
+            print(f"[bigmodel] {arch:18s} scheduler offload "
+                  f"{frac*100:.0f}% of the {workload} stream")
+
+    # ---- mixer gate (hard-fails on kernel-formulation regression) ----
+    gate_rows = [
+        _gate_cell(arch, gate_batch, gate_seq, reps, impl)
+        for arch in GATE_ARCHS
+    ]
+    gate_pass = all(r["speedup"] > 1.0 for r in gate_rows)
+    for row in gate_rows:
+        csv.append(
+            f"bigmodel_gate_{row['arch']},"
+            f"{row['batch']*row['seq']/row['chunked_tok_s']*1e6:.1f},"
+            f"chunked={row['chunked_tok_s']:.0f}tok_s"
+            f"|stepwise={row['stepwise_tok_s']:.0f}tok_s"
+            f"|speedup={row['speedup']:.2f}x")
+        if verbose:
+            print(f"[bigmodel] gate {row['arch']:12s} B={row['batch']} "
+                  f"S={row['seq']}: chunked {row['chunked_tok_s']:8.0f} tok/s"
+                  f"  stepwise {row['stepwise_tok_s']:8.0f} tok/s  "
+                  f"speedup {row['speedup']:.2f}x")
+
+    out = {
+        "backend": backend,
+        "emulated_kernels": emulated,
+        "impl_timed": "pallas" if not emulated else "xla-chunked",
+        "grid": {"n": list(n_grid), "m": list(m_grid), "reps": reps},
+        "archs": archs_out,
+        "mixer_gate": {"batch": gate_batch, "seq": gate_seq,
+                       "rows": gate_rows, "pass": gate_pass},
+    }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=2)
+        if verbose:
+            print(f"[bigmodel] wrote {out_json}")
+    if not gate_pass:
+        bad = [r["arch"] for r in gate_rows if r["speedup"] <= 1.0]
+        raise RuntimeError(
+            f"mixer gate FAILED at batch {gate_batch}: chunked kernel "
+            f"formulation did not beat the per-token XLA path for {bad} "
+            f"— kernel-path throughput regression")
+    return out, csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (seconds, not minutes)")
+    ap.add_argument("--json", default=None, help="dump results JSON here")
+    args = ap.parse_args()
+    if args.smoke:
+        run(n_grid=(8, 16), m_grid=(8, 16), reps=2, n2m_samples=500,
+            gate_seq=64, out_json=args.json)
+    else:
+        run(out_json=args.json)

@@ -18,7 +18,7 @@ from repro.core.profiles import make_profile
 from repro.core.scheduler import CNMTScheduler, NaiveScheduler
 from repro.core.simulator import make_stream, table1_row
 from repro.data.synthetic import make_corpus
-from repro.nmt.registry import make_paper_model
+from repro.models.registry import resolve
 
 # Jetson-TX2-vs-Titan-XP-like speed gap (paper Fig. 2a slopes)
 CLOUD_SPEEDUP = 5.0
@@ -40,8 +40,9 @@ def calibrate_dataset(dataset: str, *, scale: float = MODEL_SCALE,
     has coverage; M values per N bracket the language pair's gamma*N+delta
     line.  Returns (edge, cloud, n, m, t).
     """
-    model, pair = make_paper_model(dataset, scale=scale, vocab=2000,
-                                   max_decode_len=160)
+    _r = resolve(f"cnmt:{dataset}", scale=scale, vocab=2000,
+                 max_decode_len=160)
+    model, pair = _r.model, _r.pair
     import jax
     params = model.init(jax.random.PRNGKey(seed))
     translate = model.make_translate(params)

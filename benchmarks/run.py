@@ -19,6 +19,10 @@ benches.  Prints ``name,us_per_call,derived`` CSV lines at the end.
   loadgen    — MLPerf-style load generation against the real engine:
                Poisson / closed-loop / bursty / trace-replay arrivals
                over mixed workloads, with a DES-twin drift report
+  bigmodel   — Fig. 2a/Table 1 re-run on the big models/model.py stack:
+               per-architecture latency planes + N->M regressors
+               consumed by MultiTierScheduler, plus the chunked-vs-
+               stepwise mixer-kernel gate (hard-fails on regression)
   roofline   — aggregated dry-run roofline table (if records exist)
 
 Fast mode (REPRO_BENCH_FAST=1): fewer requests per simulation — used by
@@ -104,6 +108,15 @@ def main() -> None:
         _, csv = loadgen.run(n_requests=300, out_json="BENCH_loadgen.json")
     else:
         _, csv = loadgen.run(out_json="BENCH_loadgen.json")
+    csv_all += csv
+
+    from benchmarks import bigmodel
+    if fast:
+        _, csv = bigmodel.run(n_grid=(8, 16), m_grid=(8, 16), reps=2,
+                              n2m_samples=500, gate_seq=64,
+                              out_json="BENCH_bigmodel.json")
+    else:
+        _, csv = bigmodel.run(out_json="BENCH_bigmodel.json")
     csv_all += csv
 
     from benchmarks import roofline

@@ -1,10 +1,17 @@
 """Serve a reduced big-stack architecture with batched requests.
 
-Instantiates the qwen3-8b FAMILY at smoke scale (2 layers, d_model 256 —
-the full config is exercised by the multi-pod dry-run) and runs batched
-prefill + greedy decode through the serving runtime, then routes a mixed
-request stream through the C-NMT engine with the big model as the cloud
-tier and rwkv6-family (O(1)-state decode) as the edge tier.
+Resolves the qwen3-8b FAMILY at smoke scale through the unified model
+registry (2 layers, d_model 256 — the full config is exercised by the
+multi-pod dry-run) and runs batched prefill + greedy decode through the
+serving runtime, then routes a mixed request stream through the C-NMT
+engine with the big model as the cloud tier and rwkv6-family
+(O(1)-state decode) as the edge tier.
+
+When more than one JAX device is visible (e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``), the cloud-tier
+qwen session is built SHARDED over a (data, model) mesh via
+``runtime.sharded.make_sharded_session`` — same decode tokens, more
+devices.
 
 Run:  PYTHONPATH=src python examples/big_model_serving.py
 (REPRO_SMOKE=1 shrinks the routed stream for the examples smoke test.)
@@ -16,22 +23,29 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import smoke_config
 from repro.core.latency_model import DeviceProfile, LinearLatencyModel
 from repro.core.length_regressor import LinearN2M
 from repro.core.profiles import make_profile
-from repro.models.model import LM
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import resolve
 from repro.runtime.engine import CollaborativeEngine, Tier
-from repro.runtime.serving import GenerationSession
+from repro.runtime.serving import GenerationSession, build_executor
+from repro.runtime.sharded import make_sharded_session
 
 SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
 N_REQ = 6 if SMOKE else 20
 
 print("== batched serving with the big-model runtime (smoke scale) ==")
-cfg = smoke_config("qwen3-8b")
-model = LM(cfg)
+cloud_r = resolve("qwen3-8b")             # size="smoke" is the default
+model, cfg = cloud_r.model, cloud_r.cfg
 params = model.init(jax.random.PRNGKey(0))
-sess = GenerationSession(model, params, max_len=48)
+if len(jax.devices()) >= 4:
+    mesh = make_host_mesh((2, 2))
+    sess = make_sharded_session(model, params, mesh, max_len=48,
+                                batch_size=4)
+    print(f"  qwen tier sharded over a 2x2 mesh (layout={sess.layout})")
+else:
+    sess = GenerationSession(model, params, max_len=48)
 
 rng = np.random.default_rng(0)
 prompts = rng.integers(4, cfg.vocab_size, (4, 12)).astype(np.int32)
@@ -44,25 +58,23 @@ out = sess.generate(prompts, max_new=8)
 print(f"  warm generate: {time.perf_counter()-t0:.3f}s for 4x8 tokens")
 
 print("\n== C-NMT routing between two model tiers ==")
-edge_cfg = smoke_config("rwkv6-3b")
-edge_model = LM(edge_cfg)
-edge_params = edge_model.init(jax.random.PRNGKey(1))
-edge_sess = GenerationSession(edge_model, edge_params, max_len=48)
-
-
-def edge_exec(tokens):
-    toks = np.asarray(tokens, np.int32)[None, :]
-    res = edge_sess.generate(np.minimum(toks, edge_cfg.vocab_size - 1),
-                             max_new=8)
-    return res.shape[1], res[0]
-
+edge_r = resolve("rwkv6_3b")              # underscores normalize too
+edge_params = edge_r.model.init(jax.random.PRNGKey(1))
+edge_sess = GenerationSession(edge_r.model, edge_params, max_len=48)
+edge_exec = build_executor(edge_sess, kind="solo", max_new=8,
+                           vocab_clip=edge_r.cfg.vocab_size)
+cloud_exec = build_executor(sess, kind="solo", max_new=8,
+                            vocab_clip=cfg.vocab_size)
 
 profile = make_profile("cp2", seed=3)
 engine = CollaborativeEngine(
-    edge=Tier(DeviceProfile("edge-rwkv", LinearLatencyModel(1e-4, 2e-3, 0.01)),
-              executor=edge_exec),
-    cloud=Tier(DeviceProfile("pod-qwen", LinearLatencyModel(2e-5, 4e-4, 0.002))),
-    n2m=LinearN2M(0.7, 1.0), rtt_fn=profile.rtt_at, seed=0)
+    tiers=[
+        Tier(DeviceProfile("edge-rwkv", LinearLatencyModel(1e-4, 2e-3, 0.01)),
+             executor=edge_exec),
+        Tier(DeviceProfile("pod-qwen", LinearLatencyModel(2e-5, 4e-4, 0.002)),
+             executor=cloud_exec, rtt_fn=profile.rtt_at),
+    ],
+    n2m=LinearN2M(0.7, 1.0), seed=0)
 
 for i in range(N_REQ):
     n_len = int(rng.integers(4, 40))

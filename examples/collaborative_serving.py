@@ -20,15 +20,15 @@ from repro.core.calibration import make_edge_cloud_pair, measure_seq2seq_grid
 from repro.core.length_regressor import LinearN2M, prefilter_pairs
 from repro.core.profiles import make_profile
 from repro.data.synthetic import LANGUAGE_PAIRS, make_corpus
-from repro.nmt import make_paper_model
+from repro.models.registry import resolve
 from repro.runtime.engine import CollaborativeEngine, Tier
 
 SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
 N_REQ = 30 if SMOKE else 200
 
 print("== calibrating the edge model (real measurements) ==")
-model, pair = make_paper_model("de-en", scale=0.15, vocab=1000,
-                               max_decode_len=64)
+_r = resolve("cnmt:de-en", scale=0.15, vocab=1000, max_decode_len=64)
+model, pair = _r.model, _r.pair
 params = model.init(jax.random.PRNGKey(0))
 translate = model.make_translate(params)
 lp = LANGUAGE_PAIRS["de-en"]
@@ -52,9 +52,10 @@ profile = make_profile("cp2", seed=1)
 # corpus length range (benchmarks/table1.py reproduces the paper's WAN
 # setting with Jetson-scaled planes)
 engine = CollaborativeEngine(
-    edge=Tier(edge_prof, executor=lambda toks: translate(toks)),
-    cloud=Tier(cloud_prof),            # modelled (as the paper simulates)
-    n2m=n2m, rtt_fn=lambda t: float(profile.rtt_at(t)) * 0.2, seed=0)
+    tiers=[Tier(edge_prof, executor=lambda toks: translate(toks)),
+           # cloud is modelled (as the paper simulates)
+           Tier(cloud_prof, rtt_fn=lambda t: float(profile.rtt_at(t)) * 0.2)],
+    n2m=n2m, seed=0)
 
 print(f"== streaming {N_REQ} requests through the gateway ==")
 t0 = time.perf_counter()

@@ -12,7 +12,7 @@ object):
   after consecutive failures and steers later requests away up front,
   and a half-open probe rediscovers the tier once the outage ends.
 
-Part 2 crashes a REAL executor: :func:`make_faulty_executor` wraps the
+Part 2 crashes a REAL executor: :func:`build_executor(kind="raw", faults=...)` wraps the
 edge's ``tokens -> (m_out, out)`` callable so chosen calls raise
 :class:`TierFaultError` through the engine's execution boundary — the
 same failover loop catches it and re-dispatches to the cloud.
@@ -30,7 +30,7 @@ from repro.core.latency_model import DeviceProfile, LinearLatencyModel
 from repro.core.length_regressor import LinearN2M
 from repro.core.profiles import make_profile
 from repro.runtime.engine import CollaborativeEngine, Tier
-from repro.runtime.serving import TierFaultError, make_faulty_executor
+from repro.runtime.serving import TierFaultError, build_executor
 
 SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
 N_REQ = 120 if SMOKE else 400
@@ -49,9 +49,10 @@ print(f"== part 1: cloud outage {faults.outages[0].start_s:.1f}s -> "
 
 def build(retry):
     return CollaborativeEngine(
-        edge=Tier(edge_prof), cloud=Tier(cloud_prof),
+        tiers=[Tier(edge_prof),
+               Tier(cloud_prof,
+                    rtt_fn=lambda t: float(profile.rtt_at(t)))],
         n2m=LinearN2M(1.0, 0.0),
-        rtt_fn=lambda t: float(profile.rtt_at(t)),
         seed=0, faults=faults, retry=retry)
 
 
@@ -76,12 +77,13 @@ def toy_translate(tokens):
     return len(tokens), np.asarray(tokens, np.int32)
 
 
-crashing = make_faulty_executor(toy_translate, {1, 2},
-                                message="edge process killed")
+crashing = build_executor(toy_translate, kind="raw", faults={1, 2},
+                          fault_message="edge process killed")
 eng = CollaborativeEngine(
-    edge=Tier(edge_prof, executor=crashing), cloud=Tier(cloud_prof),
+    tiers=[Tier(edge_prof, executor=crashing),
+           # WAN so bad the edge always wins...
+           Tier(cloud_prof, rtt_fn=lambda t: 5.0)],
     n2m=LinearN2M(1.0, 0.0),
-    rtt_fn=lambda t: 5.0,               # WAN so bad the edge always wins...
     seed=0, retry=RetryPolicy())
 # ...except when its executor crashes: calls 1 and 2 raise inside
 # tier.run and the failover loop re-dispatches them to the cloud
@@ -91,7 +93,8 @@ for i in range(4):
           f"attempts={r.attempts} failed_tiers={r.failed_tiers}")
 assert crashing.calls["faults"] == 2, crashing.calls
 try:
-    make_faulty_executor(toy_translate, {0})(np.zeros(4, np.int32))
+    build_executor(toy_translate, kind="raw", faults={0})(
+        np.zeros(4, np.int32))
 except TierFaultError as e:
     print(f"  raw executor raise: {type(e).__name__}: {e}")
 print("done.")

@@ -27,7 +27,7 @@ from repro.core.latency_model import DeviceProfile
 from repro.core.length_regressor import LinearN2M, prefilter_pairs
 from repro.core.profiles import make_profile
 from repro.data.synthetic import make_corpus
-from repro.nmt import make_paper_model
+from repro.models.registry import resolve
 from repro.runtime.engine import CollaborativeEngine, Tier
 
 SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
@@ -36,8 +36,8 @@ BURST_AT = N_REQ // 2                 # 10 back-to-back arrivals start here
 N_SLO = 40 if SMOKE else 200          # overload-burst length
 
 print("== calibrating the edge model (real measurements) ==")
-model, pair = make_paper_model("de-en", scale=0.15, vocab=1000,
-                               max_decode_len=64)
+_r = resolve("cnmt:de-en", scale=0.15, vocab=1000, max_decode_len=64)
+model, pair = _r.model, _r.pair
 params = model.init(jax.random.PRNGKey(0))
 translate = model.make_translate(params)
 n, m, t = measure_seq2seq_grid(

@@ -29,19 +29,20 @@ from repro.core.latency_model import (ActivationCostModel, DeviceProfile,
                                       LinearLatencyModel)
 from repro.core.length_regressor import LinearN2M
 from repro.core.tx_estimator import LinkModel, TxEstimator
-from repro.nmt import make_paper_model
+from repro.models.registry import resolve
 from repro.runtime.engine import CollaborativeEngine, Tier
-from repro.runtime.serving import make_split_tier_executors
+from repro.runtime.serving import build_executor
 
 SMOKE = bool(int(os.environ.get("REPRO_SMOKE", "0")))
 N_REQ = 60 if SMOKE else 400
 
 # ---------------------------------------------------------------- part 1
 print("== real split execution: encode -> EncoderStates -> decode ==")
-model, _pair = make_paper_model("de-en", scale=0.15, vocab=1000,
-                                max_decode_len=48)
+model = resolve("cnmt:de-en", scale=0.15, vocab=1000,
+                max_decode_len=48).model
 params = model.init(jax.random.PRNGKey(0))
-encode_exec, decode_exec = make_split_tier_executors(model, params)
+encode_exec, decode_exec = build_executor(model, kind="split",
+                                          params=params)
 fused = model.make_translate_batched(params)
 
 rng = np.random.default_rng(7)

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --requests 16
+
+Pass ``--mesh DxM`` (e.g. ``--mesh 2x2``) to serve the LM sharded over a
+device mesh (``data`` x ``model`` axes); on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first so the host
+platform exposes N devices.  Decode output is bit-for-bit identical to
+the unsharded run.
 """
 
 from __future__ import annotations
@@ -12,17 +18,14 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_config, smoke_config
 from repro.core.latency_model import DeviceProfile, LinearLatencyModel
 from repro.core.length_regressor import LinearN2M
 from repro.core.profiles import make_profile
-from repro.models.model import LM
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import resolve
 from repro.runtime.engine import CollaborativeEngine, Tier
-from repro.runtime.serving import (
-    GenerationSession,
-    make_batched_tier_executor,
-    make_tier_executor,
-)
+from repro.runtime.serving import GenerationSession, build_executor
+from repro.runtime.sharded import make_sharded_session
 
 
 def main(argv=None):
@@ -33,12 +36,22 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--tiered", action="store_true",
                     help="route through the C-NMT engine")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard the LM over a (data, model) host mesh, "
+                         "e.g. 2x2 (needs that many visible devices)")
     args = ap.parse_args(argv)
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = LM(cfg)
+    r = resolve(args.arch, size="smoke" if args.smoke else "full")
+    model, cfg = r.model, r.cfg
     params = model.init(jax.random.PRNGKey(0))
-    sess = GenerationSession(model, params, max_len=64)
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.lower().split("x"))
+        mesh = make_host_mesh((d, m))
+        sess = make_sharded_session(model, params, mesh, max_len=64,
+                                    batch_size=min(args.requests, 8))
+        print(f"[serve] sharded over {d}x{m} mesh, layout={sess.layout}")
+    else:
+        sess = GenerationSession(model, params, max_len=64)
     rng = np.random.default_rng(0)
 
     if not args.tiered:
@@ -54,17 +67,20 @@ def main(argv=None):
         return
 
     profile = make_profile("cp2", seed=0)
-    edge_exec = make_tier_executor(sess, max_new=args.max_new,
-                                   vocab_clip=cfg.vocab_size)
-    edge_batched = make_batched_tier_executor(sess, max_new=args.max_new,
-                                              vocab_clip=cfg.vocab_size)
+    edge_exec = build_executor(sess, kind="solo", max_new=args.max_new,
+                               vocab_clip=cfg.vocab_size)
+    edge_batched = build_executor(sess, kind="batched", max_new=args.max_new,
+                                  vocab_clip=cfg.vocab_size)
 
     engine = CollaborativeEngine(
-        edge=Tier(DeviceProfile("edge", LinearLatencyModel(1e-4, 2e-3, 5e-3)),
-                  executor=edge_exec, batched_executor=edge_batched,
-                  batch_size=4),
-        cloud=Tier(DeviceProfile("pod", LinearLatencyModel(2e-5, 4e-4, 2e-3))),
-        n2m=LinearN2M(0.8, 1.0), rtt_fn=profile.rtt_at)
+        tiers=[
+            Tier(DeviceProfile("edge", LinearLatencyModel(1e-4, 2e-3, 5e-3)),
+                 executor=edge_exec, batched_executor=edge_batched,
+                 batch_size=4, name="edge"),
+            Tier(DeviceProfile("pod", LinearLatencyModel(2e-5, 4e-4, 2e-3)),
+                 name="cloud", rtt_fn=profile.rtt_at),
+        ],
+        n2m=LinearN2M(0.8, 1.0))
     # concurrent slots of 4: edge-routed members run as REAL batched
     # generates (submit_batch), not per-sequence calls
     slot = 4

@@ -10,6 +10,7 @@ from repro.models.config import (
     SSMConfig,
 )
 from repro.models.model import LM
+from repro.models.registry import ResolvedModel, available, resolve
 
 __all__ = [
     "EncoderConfig",
@@ -20,4 +21,7 @@ __all__ = [
     "RWKVConfig",
     "SSMConfig",
     "LM",
+    "ResolvedModel",
+    "available",
+    "resolve",
 ]

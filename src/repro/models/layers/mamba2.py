@@ -93,8 +93,16 @@ def _heads(cfg, x_in, b_in, c_in):
     return x, bb, cc
 
 
-def mamba2_full(p, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, MambaState]:
-    """Chunked SSD over a full sequence. Returns (y (B,S,D), final state)."""
+def mamba2_full(p, cfg: ModelConfig, x, *,
+                impl: str = "xla") -> Tuple[jnp.ndarray, MambaState]:
+    """Chunked SSD over a full sequence. Returns (y (B,S,D), final state).
+
+    ``impl="pallas"`` dispatches the inner SSD scan to the
+    :func:`repro.kernels.ops.ssd_scan` Pallas kernel (interpret mode on
+    CPU, Mosaic on TPU); ``"xla"`` keeps the pure-jnp chunked scan.  Both
+    compute the identical chunk algorithm — parity is pinned in
+    tests/test_bigmodel_serving.py.
+    """
     s = cfg.ssm
     b, seq, _ = x.shape
     d_in = s.expand * cfg.d_model
@@ -114,6 +122,21 @@ def mamba2_full(p, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, MambaState]:
 
     L = pick_chunk(seq, s.chunk)
     nc = seq // L
+
+    if impl == "pallas":
+        from repro.kernels.ops import ssd_scan
+        y, h_final = ssd_scan(
+            xh.astype(jnp.float32), dt, p["a_log"],
+            bh.astype(jnp.float32), ch.astype(jnp.float32), chunk=L)
+        y = y.astype(xh.dtype)
+        h_final = h_final.astype(xh.dtype)
+        y = y + xh * p["d_skip"][None, None, :, None].astype(xh.dtype)
+        y = y.reshape(b, seq, d_in)
+        y = rmsnorm(p["norm_g"], y * jax.nn.silu(z), cfg.norm_eps)
+        y = linear(p["out_proj"], y)
+        zxbcdt_tail = _split_proj(
+            cfg, linear(p["in_proj"], x[:, -(s.conv_width - 1):, :]))[1]
+        return y, MambaState(ssm=h_final, conv=zxbcdt_tail)
 
     from repro.sharding.ctx import constrain_batch
 

@@ -112,9 +112,16 @@ def _group_norm(p, y, eps, heads):
     return yn
 
 
-def rwkv6_full(p, cfg: ModelConfig, x, state: RWKVState
-               ) -> Tuple[jnp.ndarray, RWKVState]:
-    """Chunked WKV over a full sequence. Returns (y (B,S,D), final state)."""
+def rwkv6_full(p, cfg: ModelConfig, x, state: RWKVState, *,
+               impl: str = "xla") -> Tuple[jnp.ndarray, RWKVState]:
+    """Chunked WKV over a full sequence. Returns (y (B,S,D), final state).
+
+    ``impl="pallas"`` dispatches the inner WKV recurrence to the
+    :func:`repro.kernels.ops.rwkv6_wkv` Pallas kernel (interpret mode on
+    CPU, Mosaic on TPU); ``"xla"`` keeps the pure-jnp chunked scan.  Both
+    compute the identical chunk algorithm — parity is pinned in
+    tests/test_bigmodel_serving.py.
+    """
     rc = cfg.rwkv
     b, seq, d = x.shape
     hnum, pdim = d // rc.head_dim, rc.head_dim
@@ -128,6 +135,20 @@ def rwkv6_full(p, cfg: ModelConfig, x, state: RWKVState
     from repro.models.layers.mamba2 import pick_chunk
     L = pick_chunk(seq, 32)
     nc = seq // L
+
+    if impl == "pallas":
+        from repro.kernels.ops import rwkv6_wkv
+        y, s_final = rwkv6_wkv(
+            rh.astype(jnp.float32), kh.astype(jnp.float32),
+            vh.astype(jnp.float32), lw, p["u"],
+            state.wkv.astype(jnp.float32), chunk=L)
+        y = _group_norm(p, y, cfg.norm_eps, hnum)
+        y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+        y = linear(p["o"], y)
+        new_state = RWKVState(wkv=s_final.astype(state.wkv.dtype),
+                              shift_tm=x[:, -1, :],
+                              shift_cm=state.shift_cm)
+        return y, new_state
 
     from repro.sharding.ctx import constrain_batch
 

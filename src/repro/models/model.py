@@ -77,7 +77,8 @@ def _init_block(key, cfg: ModelConfig, g: LayerGroup, dtype):
 
 class LM:
     def __init__(self, cfg: ModelConfig, param_dtype=jnp.float32,
-                 remat: bool = False, constrain=None):
+                 remat: bool = False, constrain=None,
+                 mixer_impl: str = "xla"):
         """``remat=True`` checkpoints each layer body: backward recomputes
         layer internals, so training activation memory is O(layers x B x S
         x D) carries instead of every intermediate (required for the
@@ -88,10 +89,23 @@ class LM:
         jax.lax.with_sharding_constraint here so the batch sharding
         survives scan+remat boundaries (XLA's propagation alone loses it
         and replicates activations; see EXPERIMENTS.md §Perf iteration 1).
+
+        ``mixer_impl`` ("xla" | "pallas") selects the full-sequence mixer
+        backend for the recurrent families — the PR 3 ``attn_impl``
+        treatment extended to the big stack: "pallas" routes rwkv6
+        through :func:`repro.kernels.ops.rwkv6_wkv` and mamba2 through
+        :func:`repro.kernels.ops.ssd_scan` (interpret mode off-TPU);
+        "xla" keeps the pure-jnp chunked scans.  Decode is the O(1)
+        per-token recurrence either way, so the knob only affects
+        prefill/train paths.
         """
+        if mixer_impl not in ("xla", "pallas"):
+            raise ValueError(f"mixer_impl must be 'xla' or 'pallas', "
+                             f"got {mixer_impl!r}")
         self.cfg = cfg.validate()
         self.param_dtype = param_dtype
         self.remat = remat
+        self.mixer_impl = mixer_impl
         self.constrain = constrain if constrain is not None else (lambda x: x)
 
     # ------------------------------------------------------------- init --
@@ -167,10 +181,11 @@ class LM:
             y, (ckv, kpe) = att.mla_full(p["mixer"], cfg, h)
             cache = {"ckv": ckv, "kpe": kpe}
         elif g.mixer == "mamba2":
-            y, st = mb.mamba2_full(p["mixer"], cfg, h)
+            y, st = mb.mamba2_full(p["mixer"], cfg, h, impl=self.mixer_impl)
             cache = st._asdict()
         elif g.mixer == "rwkv6":
-            y, st = rk.rwkv6_full(p["mixer"], cfg, h, state_in)
+            y, st = rk.rwkv6_full(p["mixer"], cfg, h, state_in,
+                                  impl=self.mixer_impl)
             cache = st
         x = x + y
         if g.ffn != "none":

@@ -1,0 +1,135 @@
+"""ONE model registry: paper NMT pairs and big-stack LMs by name.
+
+Every serving entry point (benchmarks, examples, launch drivers) builds
+its model through :func:`resolve`, so a tier is specified by a string:
+
+* ``"cnmt:en-de"`` / ``"cnmt:de-en"`` / bare ``"de-en"`` — the paper's
+  evaluated NMT combination for that language pair (§III); direction is
+  normalized, so both orders name the same registered model.
+* ``"qwen3-8b"`` / ``"qwen3_8b"`` — a big ``models/model.py`` LM from
+  the architecture registry (``repro.configs``); underscores normalize
+  to hyphens.  ``size="smoke"`` (default) builds the reduced CPU
+  variant, ``size="full"`` the assigned production config.
+
+The old direct import (``repro.nmt.registry.make_paper_model``) still
+works but emits ``DeprecationWarning`` and delegates here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.nmt.common import RNNConfig, TransformerConfig
+from repro.nmt.gru import GRUSeq2Seq
+from repro.nmt.lstm import BiLSTMSeq2Seq
+from repro.nmt.transformer import MarianTransformer
+
+# dataset -> (model family, paper hyper-params, language pair); the
+# table itself still lives in nmt/registry (importing it there warns
+# only on make_paper_model calls, not on the table).  repro.configs and
+# models.model are imported lazily: repro.configs itself imports
+# repro.models.config, so a module-level import here would be circular
+# through the repro.models package init.
+from repro.nmt.registry import PAPER_MODELS
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedModel:
+    """What :func:`resolve` hands back: the instantiated (un-initialized)
+    model plus enough metadata to route it."""
+    name: str                 # canonical registry name
+    family: str               # "nmt" | "lm"
+    model: object             # BiLSTM/GRU/Marian seq2seq or LM
+    cfg: object               # its config object
+    pair: Optional[str] = None   # language pair (nmt only)
+
+
+def _normalize_pair(pair: str) -> str:
+    if pair in PAPER_MODELS:
+        return pair
+    rev = "-".join(reversed(pair.split("-")))
+    if rev in PAPER_MODELS:
+        return rev
+    raise KeyError(
+        f"unknown language pair {pair!r}; have {sorted(PAPER_MODELS)}")
+
+
+def _make_nmt(dataset: str, *, scale: float = 1.0, vocab: int = 8000,
+              max_decode_len: int = 256, attn_impl: str = "xla"):
+    """Instantiate the paper's model for ``dataset`` (§III).
+
+    ``scale`` shrinks widths/layers for CPU-budget-friendly calibration
+    runs (scale=1 is the paper's size). Latency *linearity* in N and M —
+    the property C-NMT exploits — is scale-invariant; the fitted
+    alpha/beta just shrink with it.  ``attn_impl`` selects the Marian
+    attention backend for the batched paths ("xla" | "pallas"); the RNN
+    models ignore it.
+    """
+    family, hp, pair = PAPER_MODELS[dataset]
+    s = lambda v: max(8, int(v * scale))
+    if family in ("bilstm", "gru"):
+        cfg = RNNConfig(
+            vocab_src=vocab, vocab_tgt=vocab,
+            embed=s(hp["embed"]), hidden=s(hp["hidden"]),
+            layers=hp["layers"], max_decode_len=max_decode_len,
+        )
+        model = BiLSTMSeq2Seq(cfg) if family == "bilstm" else GRUSeq2Seq(cfg)
+    else:
+        heads = min(8, max(2, int(8 * scale)))
+        d_model = max(heads * 8, (s(hp["d_model"]) // heads) * heads)
+        cfg = TransformerConfig(
+            vocab_src=vocab, vocab_tgt=vocab,
+            d_model=d_model, heads=heads,
+            d_ff=s(hp["d_ff"]),
+            enc_layers=max(1, int(hp["enc_layers"] * min(scale * 2, 1.0))),
+            dec_layers=max(1, int(hp["dec_layers"] * min(scale * 2, 1.0))),
+            max_decode_len=max_decode_len,
+        )
+        model = MarianTransformer(cfg, attn_impl=attn_impl)
+    return model, pair
+
+
+def available() -> Tuple[str, ...]:
+    """Canonical names this registry resolves."""
+    from repro.configs import ARCH_NAMES
+    return tuple(f"cnmt:{p}" for p in PAPER_MODELS) + tuple(ARCH_NAMES)
+
+
+def resolve(name: str, *, size: str = "smoke",
+            # NMT knobs (ignored for LM names)
+            scale: float = 1.0, vocab: int = 8000,
+            max_decode_len: int = 256, attn_impl: str = "xla",
+            # LM knobs (ignored for NMT names)
+            shape: Optional[str] = None,
+            mixer_impl: str = "xla") -> ResolvedModel:
+    """Resolve a model name to an instantiated model.
+
+    The returned model is NOT initialized — call ``.init(key)`` for
+    params, as before.  For LM names ``size`` picks ``smoke_config``
+    (default; CPU-runnable) vs ``get_config`` (the assigned production
+    config; ``shape`` selects a documented variant), and ``mixer_impl``
+    threads through to :class:`LM` ("pallas" routes rwkv6/mamba2 prefill
+    through the fused kernels).
+    """
+    from repro.configs import ARCH_NAMES, get_config, smoke_config
+    from repro.models.model import LM
+
+    if size not in ("smoke", "full"):
+        raise ValueError(f"size must be 'smoke' or 'full', got {size!r}")
+    key = name.strip()
+    if key.startswith("cnmt:") or key in PAPER_MODELS or (
+            "-".join(reversed(key.split("-"))) in PAPER_MODELS):
+        pair = _normalize_pair(key.split(":", 1)[-1])
+        model, pair = _make_nmt(pair, scale=scale, vocab=vocab,
+                                max_decode_len=max_decode_len,
+                                attn_impl=attn_impl)
+        return ResolvedModel(name=f"cnmt:{pair}", family="nmt",
+                             model=model, cfg=model.cfg, pair=pair)
+    arch = key.replace("_", "-")
+    if arch not in ARCH_NAMES:
+        raise KeyError(
+            f"unknown model {name!r}; available: {', '.join(available())}")
+    cfg = smoke_config(arch) if size == "smoke" else get_config(arch, shape)
+    model = LM(cfg, mixer_impl=mixer_impl)
+    return ResolvedModel(name=arch, family="lm", model=model, cfg=cfg)

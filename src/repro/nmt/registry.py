@@ -1,13 +1,14 @@
-"""Registry of the paper's three evaluated model/dataset combinations."""
+"""Registry of the paper's three evaluated model/dataset combinations.
+
+Deprecated entry point: model construction now lives in the unified
+:mod:`repro.models.registry` (``resolve("cnmt:de-en")``).
+:func:`make_paper_model` remains as a thin shim that emits
+``DeprecationWarning`` and delegates there.
+"""
 
 from __future__ import annotations
 
-from typing import Tuple
-
-from repro.nmt.common import RNNConfig, TransformerConfig
-from repro.nmt.gru import GRUSeq2Seq
-from repro.nmt.lstm import BiLSTMSeq2Seq
-from repro.nmt.transformer import MarianTransformer
+import warnings
 
 # dataset -> (model family, paper hyper-params, language pair)
 PAPER_MODELS = {
@@ -24,34 +25,13 @@ PAPER_MODELS = {
 def make_paper_model(dataset: str, *, scale: float = 1.0,
                      vocab: int = 8000, max_decode_len: int = 256,
                      attn_impl: str = "xla"):
-    """Instantiate the paper's model for ``dataset``.
-
-    ``scale`` shrinks widths/layers for CPU-budget-friendly calibration
-    runs (scale=1 is the paper's size). Latency *linearity* in N and M —
-    the property C-NMT exploits — is scale-invariant; the fitted
-    alpha/beta just shrink with it.  ``attn_impl`` selects the Marian
-    attention backend for the batched paths ("xla" | "pallas"); the RNN
-    models ignore it.
-    """
-    family, hp, pair = PAPER_MODELS[dataset]
-    s = lambda v: max(8, int(v * scale))
-    if family in ("bilstm", "gru"):
-        cfg = RNNConfig(
-            vocab_src=vocab, vocab_tgt=vocab,
-            embed=s(hp["embed"]), hidden=s(hp["hidden"]),
-            layers=hp["layers"], max_decode_len=max_decode_len,
-        )
-        model = BiLSTMSeq2Seq(cfg) if family == "bilstm" else GRUSeq2Seq(cfg)
-    else:
-        heads = min(8, max(2, int(8 * scale)))
-        d_model = max(heads * 8, (s(hp["d_model"]) // heads) * heads)
-        cfg = TransformerConfig(
-            vocab_src=vocab, vocab_tgt=vocab,
-            d_model=d_model, heads=heads,
-            d_ff=s(hp["d_ff"]),
-            enc_layers=max(1, int(hp["enc_layers"] * min(scale * 2, 1.0))),
-            dec_layers=max(1, int(hp["dec_layers"] * min(scale * 2, 1.0))),
-            max_decode_len=max_decode_len,
-        )
-        model = MarianTransformer(cfg, attn_impl=attn_impl)
-    return model, pair
+    """Deprecated alias for ``repro.models.registry.resolve(f"cnmt:{dataset}",
+    ...)``; returns the legacy ``(model, pair)`` tuple."""
+    warnings.warn(
+        "make_paper_model is deprecated; use "
+        "repro.models.registry.resolve('cnmt:<pair>', ...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.models.registry import resolve
+    r = resolve(f"cnmt:{dataset}", scale=scale, vocab=vocab,
+                max_decode_len=max_decode_len, attn_impl=attn_impl)
+    return r.model, r.pair

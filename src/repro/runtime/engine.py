@@ -38,7 +38,8 @@ member's reported latency reflects the batch state at its own admission;
 ``batch_size=1`` keeps the exact unbatched virtual-time bookkeeping.
 
 REAL batched execution: a tier carrying a ``batched_executor`` (from
-:func:`repro.runtime.serving.make_batched_tier_executor`) serves
+:func:`repro.runtime.serving.build_executor` with
+``kind="batched"``) serves
 :meth:`CollaborativeEngine.submit_batch` — concurrent arrivals routed
 to it are drained through a length-bucketed
 :class:`~repro.data.pipeline.TokenBatcher` into padded blocks of up to
@@ -77,6 +78,7 @@ import dataclasses
 import heapq
 import math
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -123,7 +125,8 @@ class Tier:
     (``repro.core.calibration.fit_batch_overhead``).
 
     ``batched_executor`` (``(block (b,w), lengths) -> [(m_out, tokens)]``,
-    built by :func:`repro.runtime.serving.make_batched_tier_executor`)
+    built by :func:`repro.runtime.serving.build_executor` with
+    ``kind="batched"``)
     makes execution itself batched: ``submit_batch`` drains concurrent
     arrivals into length-bucketed blocks of up to ``batch_size`` and runs
     each block as one real batched generate.  Per-request ``executor``
@@ -143,7 +146,7 @@ class Tier:
     # ContinuousGenerationSession — marks the tier for serve_continuous's
     # in-flight batching (slot-table space replaces server space there)
     continuous_session: Optional[object] = None
-    # Split-placement legs (from serving.make_split_tier_executors): the
+    # Split-placement legs (serving.build_executor kind="split"): the
     # tier can run just the encoder (tokens -> EncoderStates) and/or just
     # the decoder (EncoderStates -> (m_out, tokens)).  Both tiers of a
     # split plan need their respective leg for REAL execution; otherwise
@@ -320,11 +323,12 @@ class RequestResult:
 class CollaborativeEngine:
     """Queue-aware N-tier serving under the generalized C-NMT rule.
 
-    Construct either with ``tiers=[...]`` (each Tier carrying its own
-    ``rtt_fn`` when remote) or with the paper-faithful two-tier keywords
-    ``edge=Tier(...), cloud=Tier(...), rtt_fn=...`` — the latter builds a
-    local edge + remote cloud pair whose empty-queue decisions reproduce
-    the seed engine (CNMTScheduler + single TxEstimator) bit-for-bit.
+    Construct with ``tiers=[...]``, each Tier carrying its own ``rtt_fn``
+    when remote.  The PR-1 two-tier keywords ``edge=Tier(...),
+    cloud=Tier(...), rtt_fn=...`` still work — they build the equivalent
+    local edge + remote cloud pair, whose empty-queue decisions reproduce
+    the seed engine (CNMTScheduler + single TxEstimator) bit-for-bit —
+    but emit ``DeprecationWarning``.
 
     ``refit_interval`` (beyond paper) closes the feedback loop: every K
     completed requests an :class:`OnlineCalibrator` refits the
@@ -353,6 +357,11 @@ class CollaborativeEngine:
         if tiers is None:
             if edge is None or cloud is None or rtt_fn is None:
                 raise ValueError("pass tiers=[...] or edge/cloud/rtt_fn")
+            warnings.warn(
+                "CollaborativeEngine(edge=, cloud=, rtt_fn=) is deprecated;"
+                " pass tiers=[Tier(..., name='edge'), Tier(..., name='cloud',"
+                " rtt_fn=...)] instead",
+                DeprecationWarning, stacklevel=2)
             edge = dataclasses.replace(edge, name=edge.name or "edge",
                                        rtt_fn=None)
             cloud = dataclasses.replace(cloud, name=cloud.name or "cloud",

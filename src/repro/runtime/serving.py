@@ -26,13 +26,20 @@ for position-masked mixers (attn/mla/shared_attn); plans with recurrent
 mixers (mamba2/rwkv6) skip width bucketing since their carried state
 would fold the pad steps in.
 
-:func:`make_tier_executor` adapts a session into the ``tokens ->
-(m_out, out_tokens)`` callable a :class:`~repro.runtime.engine.Tier`
-expects; :func:`make_batched_tier_executor` is its REAL batched
-counterpart — one drained :class:`~repro.data.pipeline.TokenBatcher`
-batch in, one batched generate, per-sequence ``(m_out, tokens)`` out —
-which the engine's ``submit_batch`` uses so real execution matches the
-batch-aware occupancy accounting.
+:func:`build_executor` is the ONE factory for every executor shape a
+:class:`~repro.runtime.engine.Tier` accepts: ``kind="solo"`` adapts a
+session into the per-request ``tokens -> (m_out, out_tokens)`` callable,
+``kind="batched"`` into its REAL batched counterpart — one drained
+:class:`~repro.data.pipeline.TokenBatcher` batch in, one batched
+generate, per-sequence ``(m_out, tokens)`` out — which the engine's
+``submit_batch`` uses so real execution matches the batch-aware
+occupancy accounting; ``kind="split"`` returns the two legs of a split
+placement; ``kind="raw"`` passes an existing executor through (for
+fault-wrapping).  ``faults=...`` wraps the result with deterministic
+fault injection.  The PR-era names (``make_tier_executor``,
+``make_batched_tier_executor``, ``make_split_tier_executors``,
+``make_faulty_executor``) remain as thin aliases that emit
+``DeprecationWarning``.
 
 :class:`ContinuousGenerationSession` (continuous in-flight batching) is
 the Orca/vLLM-style refactor of the block path: a PERSISTENT slot table
@@ -58,6 +65,7 @@ hook — see ``docs/architecture.md`` for the request lifecycle.
 from __future__ import annotations
 
 import logging
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -111,15 +119,14 @@ def _next_pow2(n: int, floor: int = 1) -> int:
     return max(floor, 1 << (max(n, 1) - 1).bit_length())
 
 
-def make_tier_executor(session: "GenerationSession", *, max_new: int = 16,
-                       vocab_clip: Optional[int] = None) -> Callable:
-    """Adapt a GenerationSession into a per-request Tier executor.
+def _solo_executor(session: "GenerationSession", *, max_new: int = 16,
+                   vocab_clip: Optional[int] = None) -> Callable:
+    """Per-request ``executor(tokens) -> (m_out, out_tokens)``.
 
-    Returns ``executor(tokens) -> (m_out, out_tokens)`` for 1-D int token
-    arrays; ``vocab_clip`` guards against out-of-vocab ids when the
-    request stream's tokenizer is larger than the serving model's.
-    ``m_out`` is the TRUE per-sequence output length (pre-EOS tokens) —
-    finished sequences no longer inflate M with post-EOS argmax junk.
+    ``vocab_clip`` guards against out-of-vocab ids when the request
+    stream's tokenizer is larger than the serving model's.  ``m_out`` is
+    the TRUE per-sequence output length (pre-EOS tokens) — finished
+    sequences don't inflate M with post-EOS argmax junk.
     """
 
     def executor(tokens: np.ndarray):
@@ -143,8 +150,8 @@ class TierFaultError(RuntimeError):
     """
 
 
-def make_faulty_executor(executor: Callable, should_fail,
-                         *, message: str = "injected tier fault") -> Callable:
+def _faulty_wrap(executor: Callable, should_fail,
+                 *, message: str = "injected tier fault") -> Callable:
     """Wrap a REAL tier executor with deterministic fault injection.
 
     ``should_fail`` decides per call whether this invocation crashes:
@@ -177,10 +184,10 @@ def make_faulty_executor(executor: Callable, should_fail,
     return faulty
 
 
-def make_batched_tier_executor(session: "GenerationSession", *,
-                               max_new: int = 16,
-                               vocab_clip: Optional[int] = None) -> Callable:
-    """Adapt a GenerationSession into a REAL batched Tier executor.
+def _batched_executor(session: "GenerationSession", *,
+                      max_new: int = 16,
+                      vocab_clip: Optional[int] = None) -> Callable:
+    """REAL batched ``executor(batch, lengths=None)``.
 
     Returns ``executor(batch, lengths=None) -> [(m_out, tokens), ...]``:
     ``batch`` is one drained :class:`TokenBatcher` padded token block
@@ -224,9 +231,9 @@ def make_batched_tier_executor(session: "GenerationSession", *,
     return executor
 
 
-def make_split_tier_executors(model, params, *,
-                              vocab_clip: Optional[int] = None
-                              ) -> Tuple[Callable, Callable]:
+def _split_executors(model, params, *,
+                     vocab_clip: Optional[int] = None
+                     ) -> Tuple[Callable, Callable]:
     """Adapt an NMT model into the two LEGS of a split placement.
 
     Returns ``(encode_executor, decode_executor)`` for
@@ -258,6 +265,106 @@ def make_split_tier_executors(model, params, *,
         return m, np.asarray(out, np.int32)[0, :max(m, 1)]
 
     return encode_executor, decode_executor
+
+
+def build_executor(session_or_model, *, kind: str = "solo",
+                   max_new: int = 16,
+                   vocab_clip: Optional[int] = None,
+                   params=None,
+                   faults=None,
+                   fault_message: str = "injected tier fault"):
+    """The ONE factory for every executor shape a Tier accepts.
+
+    ``kind`` selects the adaptation:
+
+    * ``"solo"`` — ``session_or_model`` is a generation session; returns
+      the per-request ``executor(tokens) -> (m_out, out_tokens)``.
+    * ``"batched"`` — same input; returns the REAL batched
+      ``executor(batch, lengths=None) -> [(m_out, tokens), ...]`` the
+      engine's ``submit_batch`` drives (``Tier.batched_executor``).
+    * ``"split"`` — ``session_or_model`` is an NMT *model* and
+      ``params=`` its parameters; returns the ``(encode_executor,
+      decode_executor)`` pair for a partitioned placement
+      (``Tier.encode_executor`` / ``Tier.decode_executor``).
+    * ``"raw"`` — ``session_or_model`` is already an executor callable;
+      passed through untouched (useful purely to apply ``faults=``).
+
+    ``faults`` wraps the result with deterministic fault injection (a
+    ``Callable[[int], bool]`` of the call index, or a collection of call
+    indices — see :class:`TierFaultError`); the wrapper exposes
+    ``.calls``.  ``faults`` composes with every kind except ``"split"``
+    (two legs — wrap each leg yourself via ``kind="raw"``).
+    """
+    if kind == "solo":
+        executor = _solo_executor(session_or_model, max_new=max_new,
+                                  vocab_clip=vocab_clip)
+    elif kind == "batched":
+        executor = _batched_executor(session_or_model, max_new=max_new,
+                                     vocab_clip=vocab_clip)
+    elif kind == "split":
+        if params is None:
+            raise ValueError("kind='split' needs params=")
+        if faults is not None:
+            raise ValueError(
+                "faults= does not compose with kind='split' (two legs); "
+                "wrap each leg via build_executor(leg, kind='raw', "
+                "faults=...)")
+        return _split_executors(session_or_model, params,
+                                vocab_clip=vocab_clip)
+    elif kind == "raw":
+        if not callable(session_or_model):
+            raise ValueError("kind='raw' expects an executor callable")
+        executor = session_or_model
+    else:
+        raise ValueError(
+            f"kind must be 'solo'|'batched'|'split'|'raw', got {kind!r}")
+    if faults is not None:
+        executor = _faulty_wrap(executor, faults, message=fault_message)
+    return executor
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new}",
+        DeprecationWarning, stacklevel=3)
+
+
+def make_tier_executor(session, *, max_new: int = 16,
+                       vocab_clip: Optional[int] = None) -> Callable:
+    """Deprecated alias for ``build_executor(session, kind='solo')``."""
+    _warn_deprecated("make_tier_executor",
+                     "build_executor(session, kind='solo')")
+    return build_executor(session, kind="solo", max_new=max_new,
+                          vocab_clip=vocab_clip)
+
+
+def make_batched_tier_executor(session, *, max_new: int = 16,
+                               vocab_clip: Optional[int] = None) -> Callable:
+    """Deprecated alias for ``build_executor(session, kind='batched')``."""
+    _warn_deprecated("make_batched_tier_executor",
+                     "build_executor(session, kind='batched')")
+    return build_executor(session, kind="batched", max_new=max_new,
+                          vocab_clip=vocab_clip)
+
+
+def make_split_tier_executors(model, params, *,
+                              vocab_clip: Optional[int] = None
+                              ) -> Tuple[Callable, Callable]:
+    """Deprecated alias for ``build_executor(model, kind='split')``."""
+    _warn_deprecated("make_split_tier_executors",
+                     "build_executor(model, kind='split', params=...)")
+    return build_executor(model, kind="split", params=params,
+                          vocab_clip=vocab_clip)
+
+
+def make_faulty_executor(executor: Callable, should_fail,
+                         *, message: str = "injected tier fault") -> Callable:
+    """Deprecated alias for ``build_executor(executor, kind='raw',
+    faults=...)``."""
+    _warn_deprecated("make_faulty_executor",
+                     "build_executor(executor, kind='raw', faults=...)")
+    return build_executor(executor, kind="raw", faults=should_fail,
+                          fault_message=message)
 
 
 class GenerationSession:

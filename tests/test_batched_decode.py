@@ -7,7 +7,7 @@ scan, the Pallas attention backend vs the XLA reference on the Marian
 batched paths, the rewritten GenerationSession (scan vs host loop,
 post-EOS masking, per-sequence lengths, ragged prompts, shape buckets),
 and the engine's real batched execution (``submit_batch`` +
-``make_batched_tier_executor``).
+``build_executor(kind="batched")``).
 """
 
 import logging
@@ -34,8 +34,7 @@ from repro.nmt import (
 from repro.runtime.engine import CollaborativeEngine, Tier
 from repro.runtime.serving import (
     GenerationSession,
-    make_batched_tier_executor,
-    make_tier_executor,
+    build_executor,
 )
 
 V = 64
@@ -244,9 +243,10 @@ def test_session_capacity_and_ragged_guard(lm_session):
 def test_batched_executor_matches_per_sequence_executor(lm_session):
     cfg, model, params = lm_session
     sess = GenerationSession(model, params, max_len=32)
-    solo = make_tier_executor(sess, max_new=6, vocab_clip=cfg.vocab_size)
-    batched = make_batched_tier_executor(sess, max_new=6,
-                                         vocab_clip=cfg.vocab_size)
+    solo = build_executor(sess, kind="solo", max_new=6,
+                          vocab_clip=cfg.vocab_size)
+    batched = build_executor(sess, kind="batched", max_new=6,
+                             vocab_clip=cfg.vocab_size)
     rng = np.random.default_rng(4)
     lens = [4, 7, 7, 5]
     block = np.full((4, 7), PAD_ID, np.int32)
@@ -264,8 +264,8 @@ def test_batched_executor_matches_per_sequence_executor(lm_session):
 def test_batched_executor_derives_lengths_from_trailing_pads(lm_session):
     cfg, model, params = lm_session
     sess = GenerationSession(model, params, max_len=32)
-    batched = make_batched_tier_executor(sess, max_new=6,
-                                         vocab_clip=cfg.vocab_size)
+    batched = build_executor(sess, kind="batched", max_new=6,
+                             vocab_clip=cfg.vocab_size)
     rng = np.random.default_rng(5)
     block = np.full((2, 8), PAD_ID, np.int32)
     block[0, :8] = rng.integers(4, cfg.vocab_size, 8)
@@ -285,9 +285,10 @@ def test_batched_executor_recurrent_plan_runs_uniform_subgroups():
     params = model.init(jax.random.PRNGKey(0))
     sess = GenerationSession(model, params, max_len=32)
     assert not sess.supports_ragged
-    batched = make_batched_tier_executor(sess, max_new=4,
-                                         vocab_clip=cfg.vocab_size)
-    solo = make_tier_executor(sess, max_new=4, vocab_clip=cfg.vocab_size)
+    batched = build_executor(sess, kind="batched", max_new=4,
+                             vocab_clip=cfg.vocab_size)
+    solo = build_executor(sess, kind="solo", max_new=4,
+                          vocab_clip=cfg.vocab_size)
     rng = np.random.default_rng(6)
     lens = [6, 3, 6]
     block = np.full((3, 6), PAD_ID, np.int32)

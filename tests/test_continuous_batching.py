@@ -45,7 +45,7 @@ from repro.runtime.engine import CollaborativeEngine, Tier
 from repro.runtime.serving import (
     ContinuousGenerationSession,
     GenerationSession,
-    make_batched_tier_executor,
+    build_executor,
 )
 
 
@@ -212,7 +212,7 @@ def test_engine_continuous_matches_submit_batch(lm_bundle, solo_outputs):
     res_c = eng_c.serve_continuous(prompts, max_new=8)
 
     sess = GenerationSession(model, params, max_len=48)
-    bexec = make_batched_tier_executor(sess, max_new=8,
+    bexec = build_executor(sess, kind="batched", max_new=8,
                                        vocab_clip=cfg.vocab_size)
     eng_b = CollaborativeEngine(
         n2m=LinearN2M(1.0, 0.0),

@@ -2,6 +2,8 @@
 ONLY on offloaded requests) and for CollaborativeEngine.stats() math on a
 deterministic seeded run."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -62,8 +64,9 @@ def test_engine_tx_samples_equal_offload_count():
     cloud = Tier(DeviceProfile("c", LinearLatencyModel(4e-4, 1.6e-3, 0.002),
                                0.0))
     profile = make_profile("cp2", seed=7)
-    eng = CollaborativeEngine(edge=edge, cloud=cloud, n2m=LinearN2M(1.0, 0.0),
-                              rtt_fn=lambda t: float(profile.rtt_at(t)),
+    cloud = dataclasses.replace(cloud,
+                                rtt_fn=lambda t: float(profile.rtt_at(t)))
+    eng = CollaborativeEngine(tiers=[edge, cloud], n2m=LinearN2M(1.0, 0.0),
                               seed=0)
     rng = np.random.default_rng(3)
     for i in range(300):
@@ -80,8 +83,9 @@ def _run_engine(k=400, seed=0):
     cloud = Tier(DeviceProfile("c", LinearLatencyModel(4e-4, 1.6e-3, 0.002),
                                0.08))
     profile = make_profile("cp2", seed=3)
-    eng = CollaborativeEngine(edge=edge, cloud=cloud, n2m=LinearN2M(0.9, 2.0),
-                              rtt_fn=lambda t: float(profile.rtt_at(t)),
+    cloud = dataclasses.replace(cloud,
+                                rtt_fn=lambda t: float(profile.rtt_at(t)))
+    eng = CollaborativeEngine(tiers=[edge, cloud], n2m=LinearN2M(0.9, 2.0),
                               seed=seed)
     rng = np.random.default_rng(42)
     for i in range(k):

@@ -44,7 +44,7 @@ from repro.core.scheduler import MultiTierScheduler, SchedTier
 from repro.core.simulator import SimTier, make_poisson_stream, simulate_des
 from repro.core.tx_estimator import LinkModel, TxEstimator
 from repro.runtime.engine import CollaborativeEngine, Tier
-from repro.runtime.serving import TierFaultError, make_faulty_executor
+from repro.runtime.serving import TierFaultError, build_executor
 
 
 # ------------------------------------------------------ fault schedule --
@@ -145,7 +145,8 @@ def test_calibrator_excludes_failed_samples():
 
 def test_faulty_executor_wrapper():
     calls = []
-    wrapped = make_faulty_executor(lambda t: calls.append(1) or (1, t), {1})
+    wrapped = build_executor(lambda t: calls.append(1) or (1, t),
+                             kind="raw", faults={1})
     assert wrapped(np.zeros(2, np.int32))[0] == 1
     with pytest.raises(TierFaultError):
         wrapped(np.zeros(2, np.int32))
@@ -161,10 +162,10 @@ def _engine(**kw):
     cloud = Tier(DeviceProfile("c", LinearLatencyModel(4e-4, 1.6e-3, 2e-3),
                                0.0))
     profile = make_profile("cp2", seed=7)
-    return CollaborativeEngine(edge=edge, cloud=cloud,
-                               n2m=LinearN2M(1.0, 0.0),
-                               rtt_fn=lambda t: float(profile.rtt_at(t)),
-                               seed=0, **kw)
+    cloud = dataclasses.replace(
+        cloud, rtt_fn=lambda t: float(profile.rtt_at(t)))
+    return CollaborativeEngine(tiers=[edge, cloud],
+                               n2m=LinearN2M(1.0, 0.0), seed=0, **kw)
 
 
 def _drive(eng, k=300, rate_hz=20.0):
@@ -214,14 +215,15 @@ def test_engine_all_tiers_dark_sheds_with_retry_after():
 
 
 def test_engine_real_executor_crash_fails_over():
-    crashing = make_faulty_executor(lambda t: (len(t), t), {0})
+    crashing = build_executor(lambda t: (len(t), t), kind="raw",
+                              faults={0})
     edge = Tier(DeviceProfile("e", LinearLatencyModel(2e-3, 8e-3, 0.01),
                               0.0), executor=crashing)
     cloud = Tier(DeviceProfile("c", LinearLatencyModel(4e-4, 1.6e-3, 2e-3),
                                0.0))
-    eng = CollaborativeEngine(edge=edge, cloud=cloud,
+    cloud = dataclasses.replace(cloud, rtt_fn=lambda t: 5.0)
+    eng = CollaborativeEngine(tiers=[edge, cloud],   # WAN: edge always wins
                               n2m=LinearN2M(1.0, 0.0),
-                              rtt_fn=lambda t: 5.0,   # edge always wins
                               seed=0, retry=RetryPolicy())
     r0 = eng.submit(np.zeros(4, np.int32), now_s=0.0)
     r1 = eng.submit(np.zeros(4, np.int32), now_s=1.0)
@@ -358,13 +360,12 @@ def test_split_decode_failover_exact_and_engine_rehomes():
 
     from repro.core.latency_model import ActivationCostModel
     from repro.nmt import GRUSeq2Seq, RNNConfig
-    from repro.runtime.serving import make_split_tier_executors
 
     model = GRUSeq2Seq(RNNConfig(vocab_src=64, vocab_tgt=64, embed=32,
                                  hidden=32, layers=2, max_decode_len=24))
     params = model.init(jax.random.PRNGKey(0))
     fused = model.make_translate_batched(params)
-    enc, dec = make_split_tier_executors(model, params)
+    enc, dec = build_executor(model, kind="split", params=params)
 
     rng = np.random.default_rng(3)
     toks = rng.integers(3, 64, 9).astype(np.int32)

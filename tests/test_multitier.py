@@ -231,8 +231,10 @@ def test_engine_two_tier_reproduces_seed_semantics_bit_for_bit():
             tx.observe(now, rtt)
         ref.append((d.device, m_out, lat))
 
-    eng = CollaborativeEngine(edge=Tier(edge_p), cloud=Tier(cloud_p),
-                              n2m=n2m, rtt_fn=rtt_fn, seed=0)
+    eng = CollaborativeEngine(
+        tiers=[Tier(edge_p, name="edge"),
+               Tier(cloud_p, name="cloud", rtt_fn=rtt_fn)],
+        n2m=n2m, seed=0)
     for i, n in enumerate(lens):
         r = eng.submit(np.zeros(int(n), np.int32), now_s=float(i))
         dev, m_out, lat = ref[i]

@@ -6,13 +6,14 @@ import numpy as np
 import pytest
 
 from repro.data.tokenizer import BOS_ID, EOS_ID
+from repro.models.registry import resolve as registry_resolve
 from repro.nmt import (
     BiLSTMSeq2Seq,
     GRUSeq2Seq,
     MarianTransformer,
     RNNConfig,
     TransformerConfig,
-    make_paper_model,
+    PAPER_MODELS,
 )
 
 V = 64
@@ -124,7 +125,8 @@ def test_gru_context_is_fixed_size():
 def test_registry_builds_all_three():
     for ds, family in [("de-en", BiLSTMSeq2Seq), ("fr-en", GRUSeq2Seq),
                        ("en-zh", MarianTransformer)]:
-        model, pair = make_paper_model(ds, scale=0.1, vocab=128)
+        r = registry_resolve(f"cnmt:{ds}", scale=0.1, vocab=128)
+        model, pair = r.model, r.pair
         assert isinstance(model, family)
         assert pair == ds
         params = model.init(jax.random.PRNGKey(0))

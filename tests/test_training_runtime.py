@@ -129,10 +129,10 @@ def _engine(rtt=0.05, speedup=5.0):
     edge = Tier(DeviceProfile("edge", LinearLatencyModel(2e-3, 8e-3, 0.01), 0.0))
     cloud = Tier(DeviceProfile(
         "cloud", LinearLatencyModel(2e-3 / speedup, 8e-3 / speedup,
-                                    0.01 / speedup), 0.0))
-    return CollaborativeEngine(edge=edge, cloud=cloud,
-                               n2m=LinearN2M(1.0, 0.0),
-                               rtt_fn=lambda t: rtt, seed=0)
+                                    0.01 / speedup), 0.0),
+        rtt_fn=lambda t: rtt)
+    return CollaborativeEngine(tiers=[edge, cloud],
+                               n2m=LinearN2M(1.0, 0.0), seed=0)
 
 
 def test_engine_routes_short_edge_long_cloud():
@@ -159,9 +159,10 @@ def test_engine_with_real_edge_executor():
 
     edge = Tier(DeviceProfile("edge", LinearLatencyModel(1e-4, 1e-4, 1e-4), 0.0),
                 executor=fake_translate)
-    cloud = Tier(DeviceProfile("cloud", LinearLatencyModel(1e-5, 1e-5, 1e-5), 0.0))
-    eng = CollaborativeEngine(edge=edge, cloud=cloud, n2m=LinearN2M(1.0, 0.0),
-                              rtt_fn=lambda t: 10.0, seed=0)  # huge RTT
+    cloud = Tier(DeviceProfile("cloud", LinearLatencyModel(1e-5, 1e-5, 1e-5), 0.0),
+                 rtt_fn=lambda t: 10.0)      # huge RTT
+    eng = CollaborativeEngine(tiers=[edge, cloud], n2m=LinearN2M(1.0, 0.0),
+                              seed=0)
     r = eng.submit(np.arange(5), now_s=0.0)
     assert r.device == EDGE          # RTT makes cloud hopeless
     assert calls == [5]
